@@ -1,0 +1,27 @@
+"""Paper Appendix A: codec-hiding bandwidth threshold B_hide = min(G)/rho,
+and the chunked-pipeline overlap schedule's steady-state behaviour."""
+
+from __future__ import annotations
+
+from repro.core.pipeline import (ChunkSchedule, CodecProfile, hiding_bandwidth,
+                                 pipelined_transfer_time, stage_times)
+
+
+def run(emit) -> None:
+    p = CodecProfile(g_enc=613.3e9, g_dec=2181.8e9, ratio=1.324, link_bw=87.5e9)
+    emit("appendixA", "b_hide", dict(
+        b_hide_gbps=round(hiding_bandwidth(p) / 1e9, 1),
+        paper_value=463.2))
+    # pipeline overlap: at link <= B_hide the pipelined time ≈ pure transfer
+    s = 1e9
+    for bw in (12.5e9, 50e9, 87.5e9, 463.2e9, 900e9):
+        pp = CodecProfile(p.g_enc, p.g_dec, p.ratio, bw)
+        t_pipe = pipelined_transfer_time(s, pp, n_chunks=16)
+        t_xfer = stage_times(s, pp)[1]
+        emit("appendixA", f"bw{int(bw/1e9)}gbps", dict(
+            pipelined_ms=round(t_pipe * 1e3, 3),
+            pure_transfer_ms=round(t_xfer * 1e3, 3),
+            codec_exposed=round(max(0.0, t_pipe / t_xfer - 1.0), 4),
+            hidden=bool(bw <= hiding_bandwidth(pp))))
+    sched = ChunkSchedule(4).stages()
+    emit("appendixA", "schedule", dict(stages=len(sched), triples=str(sched[:4])))

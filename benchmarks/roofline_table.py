@@ -1,0 +1,92 @@
+"""Render the §Roofline markdown table from cached dry-run results.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline_table [--variant base]
+        [--multi-pod] [--arch ...] [--shape ...]
+
+Reads benchmarks/results/dryrun/*.json (produced by repro.launch.dryrun) and
+prints one row per live cell: the three roofline terms (seconds), dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, per-chip memory, and whether the cell fits
+v5e HBM (16 GiB).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+V5E_HBM = 16 * 2 ** 30
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}µs"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(variant: str = "base", multi_pod: bool = False,
+         arch: str = "", shape: str = ""):
+    pod = "pod2" if multi_pod else "pod1"
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        r = json.load(open(f))
+        parts = r["cell"].split("__")
+        if len(parts) != 4:
+            continue
+        a, s, p, v = parts
+        if v != variant or p != pod:
+            continue
+        if arch and a != arch:
+            continue
+        if shape and s != shape:
+            continue
+        rows.append(r)
+    return rows
+
+
+def markdown(rows, show_collectives: bool = False) -> str:
+    out = ["| arch | shape | t_comp | t_mem | t_coll | bound | frac "
+           "| useful | GiB/chip | fits v5e |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            a, s = r["cell"].split("__")[:2]
+            out.append(f"| {a} | {s} | — | — | — | skip | — | — | — | "
+                       f"{r.get('reason', '')[:40]} |")
+            continue
+        rl = r["roofline"]
+        mem = (r["memory"].get("peak_bytes") or 0)
+        a, s = r["cell"].split("__")[:2]
+        out.append(
+            f"| {a} | {s} | {fmt_s(rl['t_compute'])} | {fmt_s(rl['t_memory'])} "
+            f"| {fmt_s(rl['t_collective'])} | {rl['bottleneck'][:4]} "
+            f"| {rl['roofline_fraction']:.3f} | {rl['useful_flops_ratio']:.2f} "
+            f"| {mem / 2 ** 30:.2f} | {'YES' if mem <= V5E_HBM else 'NO'} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    args = ap.parse_args()
+    rows = load(args.variant, args.multi_pod, args.arch, args.shape)
+    print(markdown(rows))
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        fits = sum(1 for r in ok
+                   if (r["memory"].get("peak_bytes") or 0) <= V5E_HBM)
+        print(f"\n{len(ok)} cells, {fits} fit 16 GiB/chip")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper Table 5: calibration granularity (per-tensor / per-token /
+per-channel).  Expected: finer granularity gains ~0.06% coverage but loses
+orders of magnitude of throughput (many small codebooks, irregular access)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_config, generate_kv_bits, gbps, time_fn
+from repro.core import codebook as cbm
+from repro.core import wire
+
+
+def run(emit) -> None:
+    cfg = bench_config("qwen3-32b")
+    kv = generate_kv_bits(cfg, seq=256, batch=2)
+    # one representative K tensor: (L, B, S, H, D) -> (tokens, channels)
+    name = next(iter(kv))
+    t = kv[name]
+    t2 = t.reshape(-1, t.shape[-2] * t.shape[-1]) if t.ndim >= 2 else t.reshape(-1, 1)
+    t2 = t2[: 2048]                                  # bounded token count
+    nbytes = t2.nbytes
+
+    # per-tensor
+    cb = cbm.calibrate([t2], k=16)
+    payload, stats = wire.encode(t2, cb)
+    t_enc, _ = time_fn(lambda: wire.encode(t2, cb), repeats=3)
+    t_dec, _ = time_fn(lambda: wire.decode(payload), repeats=3)
+    emit("table5", "per-tensor", dict(
+        coverage=round(cbm.coverage(cb, t2), 5), ratio=round(stats.ratio, 4),
+        enc_gbps=round(gbps(nbytes, t_enc), 4),
+        dec_gbps=round(gbps(nbytes, t_dec), 4)))
+
+    # per-token / per-channel: many small codebooks, encoded slice-by-slice
+    for label, axis in [("per-token", 0), ("per-channel", 1)]:
+        books = cbm.calibrate_per_axis(t2, axis=axis, k=16)
+        n = t2.shape[axis]
+        covs = []
+        payloads = []
+
+        def enc_all():
+            out = []
+            for i in range(n):
+                sl = np.take(t2, i, axis=axis)
+                out.append(wire.encode(sl, books[i])[0])
+            return out
+
+        payloads = enc_all()
+
+        def dec_all():
+            return [wire.decode(p) for p in payloads]
+
+        for i in range(n):
+            covs.append(cbm.coverage(books[i], np.take(t2, i, axis=axis)))
+        total_payload = sum(len(p) for p in payloads)
+        t_enc, _ = time_fn(enc_all, repeats=1, warmup=1)
+        t_dec, _ = time_fn(dec_all, repeats=1, warmup=1)
+        emit("table5", label, dict(
+            coverage=round(float(np.mean(covs)), 5),
+            ratio=round(t2.nbytes / total_payload, 4),
+            enc_gbps=round(gbps(nbytes, t_enc), 4),
+            dec_gbps=round(gbps(nbytes, t_dec), 4)))

@@ -1,0 +1,56 @@
+"""Paper Table 6: explicit escape positions (Top-16) vs sentinel (Top-15).
+
+Expected: sentinel's ratio is marginally higher (no position bytes) but its
+decode path is irregular (in-stream sentinel detection + rank/merge) and
+much slower — the paper measures 3.5x.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_config, generate_kv_bits, gbps, pooled_bits, time_fn
+from repro.core import codebook as cbm
+from repro.core import codec as C
+
+
+def run(emit) -> None:
+    cfg = bench_config("qwen3-32b")
+    bits = pooled_bits(generate_kv_bits(cfg, seq=512, batch=4))
+    nbytes = bits.nbytes
+    cb = cbm.calibrate([bits], k=16)
+    x = jax.lax.bitcast_convert_type(jnp.asarray(bits), jnp.bfloat16)
+
+    enc16 = jax.jit(lambda v: C.encode(v, cb, cap=256))
+    ct = enc16(x)
+    dec16 = jax.jit(C.decode)
+    assert bool(jnp.all(jax.lax.bitcast_convert_type(dec16(ct), jnp.uint16)
+                        == jnp.asarray(bits)))
+    cb15 = cbm.Codebook(fmt="bf16", exponents=cb.exponents[:15])
+    enc15 = jax.jit(lambda v: C.encode_sentinel(v, cb, cap=256))
+    st = enc15(x)
+    dec15 = jax.jit(C.decode_sentinel)
+    assert bool(jnp.all(jax.lax.bitcast_convert_type(dec15(st), jnp.uint16)
+                        == jnp.asarray(bits)))
+
+    t_e16, _ = time_fn(lambda: enc16(x), repeats=5)
+    t_d16, _ = time_fn(lambda: dec16(ct), repeats=5)
+    t_e15, _ = time_fn(lambda: enc15(x), repeats=5)
+    t_d15, _ = time_fn(lambda: dec15(st), repeats=5)
+
+    esc16 = float(jnp.sum(ct.esc_count)) / ct.n_padded
+    esc15 = float(jnp.sum(st.esc_count)) / st.sign_mantissa.shape[0]
+    emit("table6", "top16-pos", dict(
+        coverage=round(cbm.coverage(cb, bits), 5), escape_rate=round(esc16, 5),
+        ratio=round(nbytes / float(C.compressed_bytes(ct)), 4),
+        enc_gbps=round(gbps(nbytes, t_e16), 3),
+        dec_gbps=round(gbps(nbytes, t_d16), 3)))
+    emit("table6", "top15-sentinel", dict(
+        coverage=round(cbm.coverage(cb15, bits), 5), escape_rate=round(esc15, 5),
+        ratio=round(nbytes / float(C.sentinel_bytes(st)), 4),
+        enc_gbps=round(gbps(nbytes, t_e15), 3),
+        dec_gbps=round(gbps(nbytes, t_d15), 3)))
+    emit("table6", "derived", dict(
+        decode_slowdown_sentinel=round(t_d15 / t_d16, 2)))

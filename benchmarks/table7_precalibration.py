@@ -1,0 +1,49 @@
+"""Paper Table 7: pre-calibrated vs dynamic (per-call) Top-16 codebook.
+
+Expected: identical ratio/escape rate; decode unchanged; encode much slower
+with the online histogram + top-k pass in the loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_config, generate_kv_bits, gbps, pooled_bits, time_fn
+from repro.core import codebook as cbm
+from repro.core import codec as C
+
+
+def run(emit) -> None:
+    cfg = bench_config("qwen3-32b")
+    bits = pooled_bits(generate_kv_bits(cfg, seq=512, batch=4))
+    nbytes = bits.nbytes
+    x = jax.lax.bitcast_convert_type(jnp.asarray(bits), jnp.bfloat16)
+    cb = cbm.calibrate([bits], k=16)
+
+    enc_pre = jax.jit(lambda v: C.encode(v, cb, cap=256))
+    ct = enc_pre(x)
+    dec_pre = jax.jit(C.decode)
+
+    enc_dyn = jax.jit(lambda v: C.encode_with_dynamic_codebook(v, cap=256))
+    streams, dcb = enc_dyn(x)
+    y = C.decode_with_dynamic_codebook(streams, dcb, x.shape, "bfloat16")
+    assert bool(jnp.all(jax.lax.bitcast_convert_type(y, jnp.uint16)
+                        == jnp.asarray(bits)))
+
+    t_ep, _ = time_fn(lambda: enc_pre(x), repeats=5)
+    t_dp, _ = time_fn(lambda: dec_pre(ct), repeats=5)
+    t_ed, _ = time_fn(lambda: enc_dyn(x), repeats=5)
+
+    esc_pre = float(jnp.sum(ct.esc_count)) / ct.n_padded
+    esc_dyn = float(jnp.sum(streams[4])) / streams[0].shape[0]
+    emit("table7", "pre-calibrated", dict(
+        ratio=round(nbytes / float(C.compressed_bytes(ct)), 4),
+        escape_rate=round(esc_pre, 5),
+        enc_gbps=round(gbps(nbytes, t_ep), 3),
+        dec_gbps=round(gbps(nbytes, t_dp), 3)))
+    emit("table7", "dynamic", dict(
+        escape_rate=round(esc_dyn, 5),
+        enc_gbps=round(gbps(nbytes, t_ed), 3),
+        enc_slowdown=round(t_ed / t_ep, 2)))

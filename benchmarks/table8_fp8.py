@@ -1,0 +1,46 @@
+"""Paper Table 8 (Appendix B): SplitZip on FP8 KV caches.
+
+E4M3 top-8 / E5M2 top-8 / E5M2 top-16, reporting coverage, ratio vs native
+FP8, ratio vs BF16, escape rate, and codec throughput.  Expected structure:
+E4M3 top-8 *expands* (ratio < 1); E5M2 top-16 is the best FP8 setting.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_config, generate_kv_bits, gbps, pooled_bits, time_fn
+from repro.core import codebook as cbm
+from repro.core import fp8 as F8
+from repro.core import wire
+
+
+def _to_fp8_bits(bf16_bits: np.ndarray, fmt: str) -> np.ndarray:
+    x = np.asarray(jax.lax.bitcast_convert_type(jnp.asarray(bf16_bits),
+                                                jnp.bfloat16))
+    dt = jnp.float8_e5m2 if fmt == "fp8_e5m2" else jnp.float8_e4m3fn
+    x8 = jnp.asarray(x).astype(dt)
+    return np.asarray(jax.lax.bitcast_convert_type(x8, jnp.uint8))
+
+
+def run(emit) -> None:
+    cfg = bench_config("qwen3-32b")
+    bf16_bits = pooled_bits(generate_kv_bits(cfg, seq=512, batch=4))
+    for var in F8.VARIANTS:
+        bits8 = _to_fp8_bits(bf16_bits, var.fmt)
+        cb = cbm.calibrate([bits8], k=var.k, fmt=var.fmt)
+        payload, stats = wire.encode(bits8, cb)
+        assert np.array_equal(wire.decode(payload), bits8)
+        t_enc, _ = time_fn(lambda: wire.encode(bits8, cb), repeats=3)
+        t_dec, _ = time_fn(lambda: wire.decode(payload), repeats=3)
+        ratio_fp8 = stats.ratio
+        ratio_bf16 = ratio_fp8 * 2.0  # fp8 already halves bf16
+        emit("table8", f"{var.fmt}-top{var.k}", dict(
+            coverage=round(cbm.coverage(cb, bits8), 5),
+            ratio_vs_fp8=round(ratio_fp8, 4),
+            ratio_vs_bf16=round(ratio_bf16, 4),
+            escape_rate=round(stats.escape_rate, 5),
+            enc_gbps=round(gbps(bits8.nbytes, t_enc), 3),
+            dec_gbps=round(gbps(bits8.nbytes, t_dec), 3)))

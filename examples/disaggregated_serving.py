@@ -1,0 +1,132 @@
+"""End-to-end PD-disaggregated serving driver with SplitZip KV transfer.
+
+This is the paper's deployment setting at example scale: a prefill worker
+runs the prompt batch, the produced KV cache crosses the PD boundary through
+the SplitZip codec (compress -> wire -> decompress, bit-exact), and a decode
+worker generates tokens from the transferred cache.
+
+Three parts:
+  1. serve a batch of requests through the DisaggregatedEngine and verify the
+     generation is IDENTICAL with and without compression (paper Table 9),
+  2. report the achieved wire ratio vs the paper's 1.324x,
+  3. drive the continuous-batching scheduler with a Poisson request trace and
+     compare TTFT / request throughput native-vs-SplitZip under a 400GbE
+     link profile (paper Fig. 2 analogue).
+
+Run:  PYTHONPATH=src python examples/disaggregated_serving.py [--arch smollm-135m]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.core import codebook as cbm
+from repro.core.pipeline import CodecProfile
+from repro.models import model as M
+from repro.serving.engine import DisaggregatedEngine
+from repro.serving.scheduler import (DisaggregatedScheduler, Request,
+                                     SchedulerConfig, summarize)
+
+
+def calibrate_from_model(params, cfg, shape) -> cbm.Codebook:
+    """Offline calibration pass (paper §3.3): run one prefill, histogram the
+    produced KV-cache exponents, take the top-16."""
+    batch = M.make_inputs(cfg, shape, key=jax.random.PRNGKey(1))
+    _, state = M.prefill(params, batch, cfg, max_seq=shape.seq_len + 32)
+    leaves = [np.asarray(jax.lax.bitcast_convert_type(l, jnp.uint16)).ravel()
+              for l in jax.tree.leaves(state.cache) if l.dtype == jnp.bfloat16]
+    return cbm.calibrate(leaves, k=16, fmt="bf16")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()   # CPU-scale, same family
+    shape = ShapeConfig("serve", seq_len=args.prompt_len,
+                        global_batch=args.batch, kind="prefill")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    print(f"arch={args.arch} (reduced: {cfg.num_layers}L d={cfg.d_model}), "
+          f"batch={args.batch}, prompt={args.prompt_len}, "
+          f"new_tokens={args.new_tokens}")
+
+    # --- 1) offline codebook calibration -------------------------------------
+    cb = calibrate_from_model(params, cfg, shape)
+    print(f"calibrated top-16 exponent codebook: {cb.exponents}")
+
+    # --- 2) serve the same batch with and without SplitZip -------------------
+    batch = M.make_inputs(cfg, shape, key=jax.random.PRNGKey(2))
+    max_seq = args.prompt_len + args.new_tokens + 8
+
+    eng_raw = DisaggregatedEngine(cfg, params, cb, compress=False)
+    eng_sz = DisaggregatedEngine(cfg, params, cb, compress=True)
+    t0 = time.time()
+    out_raw = eng_raw.generate(batch, args.new_tokens, max_seq=max_seq)
+    t_raw = time.time() - t0
+    t0 = time.time()
+    out_sz = eng_sz.generate(batch, args.new_tokens, max_seq=max_seq)
+    t_sz = time.time() - t0
+
+    identical = bool(jnp.all(out_raw == out_sz))
+    print(f"\ngenerated ids (first request): {np.asarray(out_sz[0])[:12]} ...")
+    print(f"compressed == uncompressed generation: {identical} "
+          f"(paper Table 9: lossless => zero output difference)")
+    assert identical, "SplitZip must be bit-exact end to end"
+    print(f"wire ratio achieved: {eng_sz.stats.transfer_ratio:.3f}x "
+          f"(paper: 1.324x; theoretical limit 1.333x)")
+    print(f"codec escape-capacity ok: {eng_sz.stats.codec_ok}  "
+          f"[CPU wall-times raw={t_raw:.2f}s splitzip={t_sz:.2f}s — "
+          f"codec cost is GPU/TPU-hidden in deployment, see Appendix A]")
+
+    # --- 3) continuous-batching scheduler under a 400GbE profile -------------
+    # Codec profile uses the paper's measured H200 numbers; the link is 400GbE
+    # (50 GB/s), the regime Fig. 2 targets.
+    prof = CodecProfile(g_enc=613.3e9, g_dec=2181.8e9,
+                        ratio=float(eng_sz.stats.transfer_ratio), link_bw=50e9,
+                        fixed_overhead_s=2e-4)
+    kv_bytes_tok = int(eng_sz.stats.raw_cache_bytes
+                       // (args.batch * max_seq))
+
+    rng = np.random.default_rng(0)
+    def trace():
+        t, reqs = 0.0, []
+        for i in range(256):
+            t += float(rng.exponential(0.004))
+            reqs.append(Request(rid=i, arrival=t,
+                                prompt_len=int(rng.choice([8192, 32768, 65536])),
+                                max_new_tokens=64))
+        return reqs
+
+    results = {}
+    for name, compress in [("native", False), ("splitzip", True)]:
+        sched = DisaggregatedScheduler(SchedulerConfig(
+            max_prefill_batch=8, max_decode_slots=64,
+            kv_bytes_per_token=kv_bytes_tok * 256,  # scale to paper-like KV/token
+            profile=prof, compress=compress))
+        for r in trace():
+            sched.submit(r)
+        results[name] = summarize(sched.run())
+
+    n, s = results["native"], results["splitzip"]
+    print(f"\nscheduler sweep (256 requests, long prompts, 400GbE):")
+    print(f"  native  : TTFT {n['mean_ttft_s'] * 1e3:8.1f} ms   "
+          f"req/s {n['throughput_req_s']:.2f}")
+    print(f"  splitzip: TTFT {s['mean_ttft_s'] * 1e3:8.1f} ms   "
+          f"req/s {s['throughput_req_s']:.2f}")
+    print(f"  TTFT speedup {n['mean_ttft_s'] / s['mean_ttft_s']:.3f}x "
+          f"(paper Fig. 2: up to 1.303x), req-throughput "
+          f"{s['throughput_req_s'] / n['throughput_req_s']:.3f}x "
+          f"(paper: up to 1.233x)")
+
+
+if __name__ == "__main__":
+    main()

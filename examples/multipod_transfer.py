@@ -1,0 +1,81 @@
+"""Cross-pod KV-cache transfer on a multi-pod device mesh (scaled down).
+
+The production dry-run uses a (pod=2, data=16, model=16) mesh; here we build
+the same topology at (pod=2, data=2, model=2) on 8 simulated host devices so
+the *distribution semantics* run for real on CPU:
+
+  - prefill pod (pod 0) holds a sharded KV cache,
+  - SplitZip encodes each shard locally (codec is pointwise => fully
+    parallel across the mesh),
+  - the compressed streams cross the pod axis via `lax.ppermute` inside
+    `shard_map` (this is the DCN hop in production),
+  - decode pod (pod 1) decompresses its shards; result is bit-exact.
+
+The wire-byte reduction (~1/1.324) is visible in the lowered HLO
+collective-permute operand sizes — printed at the end, this is exactly what
+the roofline's collective term measures.
+
+NOTE: must run as its own process (device count is fixed at jax init).
+Run:  PYTHONPATH=src python examples/multipod_transfer.py
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8").strip()
+
+import jax                                                        # noqa: E402
+import jax.numpy as jnp                                           # noqa: E402
+import numpy as np                                                # noqa: E402
+
+from repro.core import codebook as cbm                            # noqa: E402
+from repro.launch.mesh import make_mesh                           # noqa: E402
+from repro.serving import transfer as T                           # noqa: E402
+from repro.analysis.roofline import collective_bytes_from_hlo     # noqa: E402
+
+
+def main():
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    print(f"mesh: {dict(mesh.shape)} on {mesh.devices.size} host devices")
+
+    # a KV-cache pytree, sharded (data, model) within each pod
+    rng = np.random.default_rng(0)
+    def kv_like(shape):
+        x = rng.normal(size=shape) * rng.choice([0.25, 1.0, 4.0], size=shape)
+        return jnp.asarray(x, dtype=jnp.bfloat16)
+
+    cache = {"k": kv_like((4, 8, 256, 4, 32)),   # (layers, B, S, kvh, hd)
+             "v": kv_like((4, 8, 256, 4, 32))}
+
+    cb = cbm.calibrate(
+        [np.asarray(jax.lax.bitcast_convert_type(cache["k"], jnp.uint16))],
+        k=16)
+
+    def xfer(tc):
+        moved, hlo = T.transfer_cache_cross_pod(
+            cache, mesh, tc, src_pod=0, dst_pod=1, return_hlo=True)
+        same = jax.tree.all(jax.tree.map(
+            lambda a, b: bool(jnp.all(
+                jax.lax.bitcast_convert_type(a, jnp.uint16)
+                == jax.lax.bitcast_convert_type(b, jnp.uint16))),
+            cache, moved))
+        assert same, "cross-pod transfer must be bit-exact"
+        return collective_bytes_from_hlo(hlo)["collective-permute"]
+
+    raw_b = xfer(T.TransferConfig(codebook=cb, enabled=False))
+    chunked_b = xfer(T.TransferConfig(codebook=cb, chunk=1024, cap=64))
+    global_b = xfer(T.TransferConfig(codebook=cb, layout="global"))
+
+    print("cross-pod transfers bit-exact: True (all three modes)")
+    print(f"collective-permute bytes on the pod axis (per device):")
+    print(f"  native raw                : {raw_b:>9} (1.000x)")
+    print(f"  SplitZip chunked (paper)  : {chunked_b:>9} "
+          f"({raw_b / chunked_b:.3f}x) — static per-chunk escape buffers")
+    print(f"  SplitZip global (ours)    : {global_b:>9} "
+          f"({raw_b / global_b:.3f}x) — two-level escape compaction")
+    print(f"paper's variable-length wire ratio: 1.324x; in-graph static "
+          f"buffers pay capacity padding, which the global layout removes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Fault-tolerant training with SplitZip-compressed checkpoints.
+
+Demonstrates the training-side substrate around the paper's codec:
+
+  1. train a reduced-config model with the sharded AdamW train step,
+  2. checkpoint every K steps — bf16 leaves go through the SplitZip *wire*
+     codec (lossless, ~25% smaller checkpoints),
+  3. simulate a node failure mid-run (process "dies"),
+  4. restart, restore the latest checkpoint, continue to the target step,
+  5. verify the resumed run reaches bit-identical state vs an uninterrupted
+     run (deterministic data pipeline + deterministic step).
+
+Also shows the beyond-paper trick: SplitZip-compressed cross-pod gradient
+all-reduce (lossless => zero convergence impact, unlike lossy compression).
+
+Run:  PYTHONPATH=src python examples/train_resume.py [--arch llama3.2-3b]
+"""
+
+import argparse
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.distributed import checkpoint as CKPT
+from repro.training import optimizer as OPT
+from repro.training import train_step as TS
+from repro.training.data import SyntheticTokenStream
+
+
+def run_training(cfg, shape, steps, ckpt_dir=None, ckpt_every=4,
+                 die_at=None, resume=False, grad_compress=False):
+    """Train to `steps`; optionally die at `die_at`, optionally resume."""
+    opt_cfg = OPT.AdamWConfig(lr=1e-3, total_steps=steps, warmup_steps=2)
+    step_fn = jax.jit(TS.make_train_step(cfg, opt_cfg,
+                                         grad_compress=grad_compress,
+                                         kv_block=shape.seq_len))
+    data = SyntheticTokenStream(cfg, shape)
+
+    state = TS.init_state(cfg, jax.random.PRNGKey(0))
+    start = 0
+    if resume and ckpt_dir and CKPT.latest_step(ckpt_dir) is not None:
+        state, extra, start = CKPT.restore(ckpt_dir, state)
+        print(f"  [restart] resumed from step {start} "
+              f"({extra.get('arch', '?')})")
+
+    for step in range(start, steps):
+        batch = data.batch_at(step)           # deterministic per step
+        state, metrics = step_fn(state, batch)
+        print(f"  step {step:3d}  loss {float(metrics['loss']):.4f}  "
+              f"gnorm {float(metrics['grad_norm']):.3f}")
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            CKPT.save(ckpt_dir, step + 1, state, extra={"arch": cfg.name})
+        if die_at is not None and step + 1 == die_at:
+            print(f"  [failure injected] node died after step {step}")
+            return None
+    return state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--steps", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    shape = ShapeConfig("cli", seq_len=32, global_batch=4, kind="train")
+    print(f"training {args.arch} (reduced) for {args.steps} steps, "
+          f"checkpoint every 4\n")
+
+    workdir = tempfile.mkdtemp(prefix="splitzip_ckpt_")
+    try:
+        # -- reference: uninterrupted run -------------------------------------
+        print("reference run (no failure):")
+        ref = run_training(cfg, shape, args.steps)
+
+        # -- failure at step 6, restart, resume from step 4 --------------------
+        print("\nfaulty run (dies after step 6):")
+        run_training(cfg, shape, args.steps, ckpt_dir=workdir, die_at=6)
+        print("restarted process:")
+        rec = run_training(cfg, shape, args.steps, ckpt_dir=workdir,
+                           resume=True)
+
+        same = jax.tree.all(jax.tree.map(
+            lambda a, b: bool(jnp.all(a == b)), ref.params, rec.params))
+        print(f"\nresumed params bit-identical to uninterrupted run: {same}")
+        assert same, "deterministic resume must reproduce the reference run"
+
+        # -- checkpoint compression accounting ---------------------------------
+        step = CKPT.latest_step(workdir)
+        comp = CKPT.checkpoint_bytes(workdir, step)
+        raw = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(rec))
+        print(f"checkpoint bytes: {comp} vs raw {raw} "
+              f"({raw / comp:.3f}x smaller via SplitZip wire codec)")
+
+        # -- lossless compressed gradient sync ---------------------------------
+        print("\nwith SplitZip-compressed gradient all-reduce "
+              "(lossless => identical math):")
+        gc = run_training(cfg, shape, 3, grad_compress=True)
+        plain = run_training(cfg, shape, 3)
+        same_g = jax.tree.all(jax.tree.map(
+            lambda a, b: bool(jnp.all(a == b)), gc.params, plain.params))
+        print(f"grad-compressed run bit-identical to plain run: {same_g}")
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""RecurrentGemma-9B — RG-LRU + local attention, 2:1 pattern
+[arXiv:2402.19427; unverified].
+
+Sub-quadratic: runs the long_500k cell (recurrent state + 2048-window cache
+are both sequence-length-independent at decode).
+"""
+
+from repro.configs.base import ArchConfig, HybridConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,      # MQA in the local-attention layers
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    rope_theta=10000.0,
+    hybrid=HybridConfig(
+        pattern=("rglru", "rglru", "local_attn"),
+        window=2048,
+        lru_width=4096,
+        conv_width=4,
+    ),
+    source="arXiv:2402.19427; unverified",
+)

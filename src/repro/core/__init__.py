@@ -1,0 +1,20 @@
+"""SplitZip core: calibration, in-graph codec, wire codec, FP8, pipeline model."""
+
+from repro.core.codebook import (  # noqa: F401
+    Codebook,
+    calibrate,
+    codebook_from_histogram,
+    coverage,
+    escape_rate,
+    exponent_entropy,
+    exponent_histogram,
+    topk_coverage,
+)
+from repro.core.codec import (  # noqa: F401
+    CompressedTensor,
+    compressed_bytes,
+    compression_ratio,
+    decode,
+    encode,
+    theoretical_ratio,
+)

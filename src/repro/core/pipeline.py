@@ -1,0 +1,91 @@
+"""Pipeline-overlap model for the PD transfer path (paper Appendix A).
+
+For one pipeline chunk of raw size S with compression ratio rho, codec
+throughputs G_enc/G_dec and physical link bandwidth B:
+
+    T_enc = S / G_enc,  T_xfer = S / (rho * B),  T_dec = S / G_dec
+
+Steady state: T_pipe = max(T_enc, T_xfer, T_dec); codec overhead is fully
+hidden iff B <= B_hide = min(G_enc, G_dec) / rho.
+
+This module also provides the additive accounting the paper uses for the
+Fig. 4 transmission breakdown, and the chunked-pipeline schedule used by the
+transfer engine to overlap encode / transfer / decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecProfile:
+    """Measured or assumed codec/link characteristics (all bytes/s)."""
+
+    g_enc: float          # compression throughput (vs uncompressed bytes)
+    g_dec: float          # decompression throughput
+    ratio: float          # compression ratio rho
+    link_bw: float        # physical link bandwidth for compressed bytes
+    fixed_overhead_s: float = 0.0  # per-transfer launch/setup cost
+
+
+def stage_times(s_bytes: float, p: CodecProfile) -> Tuple[float, float, float]:
+    t_enc = s_bytes / p.g_enc
+    t_xfer = s_bytes / (p.ratio * p.link_bw)
+    t_dec = s_bytes / p.g_dec
+    return t_enc, t_xfer, t_dec
+
+
+def additive_transfer_time(s_bytes: float, p: CodecProfile) -> float:
+    """Paper Fig. 4 accounting: encode + compressed transfer + decode."""
+    return sum(stage_times(s_bytes, p)) + p.fixed_overhead_s
+
+
+def native_transfer_time(s_bytes: float, p: CodecProfile) -> float:
+    return s_bytes / p.link_bw + p.fixed_overhead_s
+
+
+def pipelined_transfer_time(s_bytes: float, p: CodecProfile, n_chunks: int) -> float:
+    """Chunked steady-state pipeline: fill + (n-1) * bottleneck + drain."""
+    if n_chunks <= 0:
+        raise ValueError("n_chunks must be >= 1")
+    per = s_bytes / n_chunks
+    t_enc, t_xfer, t_dec = stage_times(per, p)
+    bottleneck = max(t_enc, t_xfer, t_dec)
+    return t_enc + t_xfer + t_dec + (n_chunks - 1) * bottleneck + p.fixed_overhead_s
+
+
+def hiding_bandwidth(p: CodecProfile) -> float:
+    """B_hide = min(G_enc, G_dec) / rho  (Appendix A)."""
+    return min(p.g_enc, p.g_dec) / p.ratio
+
+
+def speedup(s_bytes: float, p: CodecProfile, pipelined: bool = False,
+            n_chunks: int = 8) -> float:
+    base = native_transfer_time(s_bytes, p)
+    ours = (pipelined_transfer_time(s_bytes, p, n_chunks)
+            if pipelined else additive_transfer_time(s_bytes, p))
+    return base / ours
+
+
+def theoretical_opt_speedup(p: CodecProfile) -> float:
+    """Zero codec overhead, zero escapes: speedup == rho (paper Fig. 3)."""
+    return p.ratio
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkSchedule:
+    """An explicit overlapped schedule for the transfer engine: at step t the
+    engine encodes chunk t, transfers chunk t-1 and decodes chunk t-2."""
+
+    n_chunks: int
+
+    def stages(self) -> List[Tuple[int, int, int]]:
+        out = []
+        for t in range(self.n_chunks + 2):
+            enc = t if t < self.n_chunks else -1
+            xfer = t - 1 if 0 <= t - 1 < self.n_chunks else -1
+            dec = t - 2 if 0 <= t - 2 < self.n_chunks else -1
+            out.append((enc, xfer, dec))
+        return out

@@ -1,0 +1,108 @@
+"""Elastic scaling: legal mesh enumeration + re-mesh planning after capacity
+changes (node loss / scale-up), preserving DP/TP semantics.
+
+A (pod, data, model) mesh is *legal* for an arch/shape when
+  - global_batch % (pod*data) == 0            (DP divisibility)
+  - the model's TP-shardable dims tolerate 'model' (the divisibility-aware
+    rules replicate what doesn't divide, so any model size is legal, but we
+    prefer meshes that keep FFN/vocab sharded)
+Re-mesh = pick the best legal mesh for the surviving chip count, then
+checkpoint-restore resharding (parameters are saved shard-agnostically).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    score: float
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def _divisors(n: int) -> List[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def legal_meshes(n_chips: int, cfg: ArchConfig, shape: ShapeConfig,
+                 multi_pod: bool = False, n_pods: int = 1) -> List[MeshPlan]:
+    """Enumerate (data, model) splits of n_chips (per pod), scored."""
+    plans = []
+    per_pod = n_chips // n_pods if multi_pod else n_chips
+    for model in _divisors(per_pod):
+        data = per_pod // model
+        dp = data * (n_pods if multi_pod else 1)
+        if shape.global_batch % dp and shape.global_batch >= dp:
+            continue
+        score = 0.0
+        # prefer: FFN sharded, vocab sharded, heads sharded, batch not over-split
+        if cfg.d_ff and cfg.d_ff % model == 0:
+            score += 2.0
+        if cfg.vocab_size % model == 0:
+            score += 1.5
+        if cfg.num_heads and cfg.num_heads % model == 0:
+            score += 1.0
+        if shape.global_batch % dp == 0 and shape.global_batch // dp >= 1:
+            score += 1.0
+        # mild preference for more TP on big models (memory), more DP on small
+        big = cfg.param_count() > 8e9
+        score += 0.01 * (model if big else data)
+        if multi_pod:
+            plans.append(MeshPlan((n_pods, data, model),
+                                  ("pod", "data", "model"), score))
+        else:
+            plans.append(MeshPlan((data, model), ("data", "model"), score))
+    return sorted(plans, key=lambda p: -p.score)
+
+
+def replan_after_failure(current: MeshPlan, surviving_chips: int,
+                         cfg: ArchConfig, shape: ShapeConfig) -> Optional[MeshPlan]:
+    """Best legal mesh at the surviving capacity (None if impossible)."""
+    multi = "pod" in current.axes
+    n_pods = current.shape[0] if multi else 1
+    if multi and surviving_chips < n_pods:
+        multi, n_pods = False, 1
+    # round down to a power-of-two-ish usable chip count for clean meshes
+    usable = surviving_chips
+    while usable > 0:
+        plans = legal_meshes(usable, cfg, shape, multi_pod=multi, n_pods=n_pods)
+        if plans:
+            return plans[0]
+        usable -= 1
+    return None
+
+
+@dataclasses.dataclass
+class ElasticEvent:
+    step: int
+    kind: str                 # 'shrink' | 'grow'
+    chips_delta: int
+
+
+def simulate_elastic_run(events: List[ElasticEvent], start_chips: int,
+                         cfg: ArchConfig, shape: ShapeConfig) -> List[MeshPlan]:
+    """Drive replanning through a capacity-change schedule; returns the mesh
+    history (used by tests + the elasticity example)."""
+    chips = start_chips
+    plan = legal_meshes(chips, cfg, shape)[0]
+    history = [plan]
+    for ev in sorted(events, key=lambda e: e.step):
+        chips = max(1, chips + ev.chips_delta)
+        nxt = replan_after_failure(plan, chips, cfg, shape)
+        if nxt is None:
+            raise RuntimeError(f"no legal mesh at {chips} chips")
+        plan = nxt
+        history.append(plan)
+    return history

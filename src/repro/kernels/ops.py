@@ -1,0 +1,113 @@
+"""Jit'd wrappers around the SplitZip Pallas kernels.
+
+``encode``/``decode`` here are drop-in replacements for
+:mod:`repro.core.codec`'s pure-XLA versions: the dense paths run through
+`pl.pallas_call` kernels while escape collection / sparse correction stay in
+XLA (paper's two-stage structure).  On non-TPU backends the kernels run in
+``interpret=True`` mode (Python semantics of the kernel body), which is how
+this repo validates them on CPU; on TPU they compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec as core_codec
+from repro.core.codebook import FORMATS, Codebook
+from repro.kernels import splitzip_decode, splitzip_encode
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _auto_interpret(interpret):
+    return (not _on_tpu()) if interpret is None else interpret
+
+
+def _block_rows(rows: int, want: int) -> int:
+    """Largest divisor of ``rows`` that is <= want (grid must tile exactly)."""
+    br = min(want, rows)
+    while rows % br:
+        br -= 1
+    return max(br, 1)
+
+
+def encode(
+    x: jax.Array,
+    codebook: Codebook,
+    chunk: int = core_codec.DEFAULT_CHUNK,
+    cap: int = core_codec.DEFAULT_CAP,
+    block_rows: int = splitzip_encode.DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> core_codec.CompressedTensor:
+    """SplitZip encode with the Pallas dense kernel."""
+    fmt = codebook.fmt
+    orig_shape, orig_dtype = x.shape, x.dtype
+    bits = core_codec.to_bits(x, fmt).reshape(-1)
+    pad_e = codebook.exponents[0]
+    pad_bits = jnp.asarray(np.uint64(pad_e) << FORMATS[fmt]["mbits"], dtype=bits.dtype)
+    bits = core_codec._pad_to_chunk(bits, chunk, pad_bits)
+    rows = bits.shape[0] // chunk
+    bits2 = bits.reshape(rows, chunk)
+
+    a, packed, is_esc = splitzip_encode.encode_dense(
+        bits2,
+        tuple(codebook.exponents),
+        fmt=fmt,
+        chunk=chunk,
+        block_rows=_block_rows(rows, block_rows),
+        interpret=_auto_interpret(interpret),
+    )
+    e, _ = core_codec.split_fields(bits, fmt)
+    esc_pos, esc_val, esc_count, ok = core_codec.collect_escapes(
+        e, ~(is_esc.reshape(-1).astype(bool)), chunk, cap
+    )
+    return core_codec.CompressedTensor(
+        sign_mantissa=a.reshape(-1),
+        packed=packed.reshape(-1),
+        esc_pos=esc_pos,
+        esc_val=esc_val,
+        esc_count=esc_count,
+        ok=ok,
+        shape=tuple(orig_shape),
+        dtype=str(orig_dtype),
+        fmt=fmt,
+        exponents=tuple(codebook.exponents),
+        chunk=chunk,
+        cap=cap,
+    )
+
+
+def decode(
+    ct: core_codec.CompressedTensor,
+    block_rows: int = splitzip_decode.DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """SplitZip decode with the Pallas dense kernel + XLA sparse correction."""
+    chunk = ct.chunk
+    rows = ct.n_padded // chunk
+    packed2 = ct.packed.reshape(rows, chunk // 2)
+    a2 = ct.sign_mantissa.reshape(rows, chunk)
+    bits2 = splitzip_decode.decode_dense(
+        packed2,
+        a2,
+        tuple(ct.exponents),
+        fmt=ct.fmt,
+        chunk=chunk,
+        block_rows=_block_rows(rows, block_rows),
+        interpret=_auto_interpret(interpret),
+    )
+    # sparse correction: rebuild exponent field only at escape positions
+    bits = bits2.reshape(-1)
+    spec = FORMATS[ct.fmt]
+    mbits, ebits = spec["mbits"], spec["ebits"]
+    e = ((bits.astype(jnp.int32) >> mbits) & ((1 << ebits) - 1)).astype(jnp.uint8)
+    e = core_codec.scatter_escapes(e, ct.esc_pos, ct.esc_val, chunk)
+    bits = core_codec.join_fields(e, ct.sign_mantissa, ct.fmt)
+    n = ct.n_elements
+    return core_codec.from_bits(bits[:n].reshape(ct.shape), jnp.dtype(ct.dtype))

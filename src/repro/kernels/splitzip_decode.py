@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: SplitZip dense decode path (paper §3.2, decode).
+
+Unpacks two 4-bit codes per byte, maps each through the 16-entry codebook
+(baked in as compile-time scalars — a one-hot select chain instead of a
+gather), and reassembles the BF16/FP8 bit pattern with the exact
+sign-mantissa stream.  The sparse escape overwrite happens *outside* the
+kernel (XLA scatter at escape positions), exactly mirroring the paper's
+"dense lookup path + separate sparse overwrite" structure that its Table 6
+ablation shows is 3.5× faster than sentinel-style in-stream detection.
+
+Tiling mirrors the encode kernel: (BLOCK_ROWS, CHUNK) tiles, CHUNK = 1024
+lanes-aligned, everything int32 on the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.codebook import FORMATS
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _decode_kernel(packed_ref, a_ref, bits_ref, *, exponents, mbits, bits_width):
+    packed = packed_ref[...].astype(jnp.int32)
+    a = a_ref[...].astype(jnp.int32)
+
+    # unpack: byte j holds codes (2j | 2j+1<<4) -> interleave back to (R, C)
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    r, half = packed.shape
+    code = jnp.stack([lo, hi], axis=-1).reshape(r, half * 2)
+
+    # one-hot × codebook contraction (no gather): e = Σ_k [code==k]·c_k
+    e = jnp.zeros_like(code)
+    for idx, ce in enumerate(exponents):  # static unroll, K <= 16
+        e = jnp.where(code == idx, ce, e)
+
+    # reassemble: x = (sign << (bits-1)) | (e << mbits) | mantissa
+    sign = (a >> mbits) & 1
+    out = (sign << (bits_width - 1)) | (e << mbits) | (a & ((1 << mbits) - 1))
+    bits_ref[...] = out.astype(bits_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("exponents", "fmt", "chunk", "block_rows", "interpret")
+)
+def decode_dense(
+    packed: jax.Array,
+    sign_mantissa: jax.Array,
+    exponents: tuple,
+    fmt: str = "bf16",
+    chunk: int = 1024,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Dense decode to container bits: (rows, chunk//2) packed + (rows, chunk)
+    sign-mantissa -> (rows, chunk) u16/u8 bit patterns (escapes still dummy)."""
+    spec = FORMATS[fmt]
+    rows, c = sign_mantissa.shape
+    if c != chunk or packed.shape != (rows, chunk // 2):
+        raise ValueError("stream shapes inconsistent with chunk")
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows ({rows}) must divide block_rows ({br})")
+    grid = (rows // br,)
+    out_dtype = jnp.uint16 if spec["bits"] == 16 else jnp.uint8
+    kernel = functools.partial(
+        _decode_kernel,
+        exponents=tuple(int(e) for e in exponents),
+        mbits=spec["mbits"],
+        bits_width=spec["bits"],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, chunk // 2), lambda i: (i, 0)),
+            pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, chunk), out_dtype),
+        interpret=interpret,
+    )(packed, sign_mantissa)

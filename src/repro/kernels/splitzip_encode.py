@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: SplitZip dense encode path (paper §3.2, stage 1).
+
+The kernel implements the *dense* transformation — field split, codebook
+lookup, nibble packing, escape-mask emission — over VMEM tiles.  The sparse
+escape *collection* (stage 2) is deliberately outside the kernel (XLA cumsum +
+bounded scatter), mirroring the paper's two-stage encode: "Using a separate
+escape-collection stage keeps the common path simple and regular."
+
+TPU adaptation (DESIGN.md §2): the GPU version gathers through a 256-byte
+encode LUT; a per-lane byte gather is not VPU-shaped, so we bake the 16
+calibrated exponents in as compile-time scalars and evaluate 16 broadcast
+compares per element.  All arithmetic is int32 (native VPU width); inputs and
+outputs are narrow integer streams.
+
+Tiling: the flat bit stream is viewed as (rows, CHUNK) with CHUNK = the
+escape-chunk size (1024 = 8 sublanes × 128 lanes, hardware-aligned).  Each
+grid step processes BLOCK_ROWS rows; with BLOCK_ROWS = 256 the working set is
+  in  : 256×1024×4B (i32 upcast of the u16 bits)   = 1.0 MiB
+  out : a (1B) + packed (0.5B) + esc mask (1B)      = 0.64 MiB
+comfortably inside a v5e core's ~16 MiB VMEM with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.codebook import FORMATS
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _encode_kernel(bits_ref, a_ref, packed_ref, esc_ref, *, exponents, mbits, ebits):
+    x = bits_ref[...].astype(jnp.int32)
+    # field split: e = (x >> mbits) & emask ; a = sign-in-bit-mbits | mantissa
+    e = (x >> mbits) & ((1 << ebits) - 1)
+    a = ((x >> ebits) & (1 << mbits)) | (x & ((1 << mbits) - 1))
+    a_ref[...] = a.astype(jnp.uint8)
+
+    # compare-select code assignment: 16 broadcast compares, escapes -> code 0
+    code = jnp.zeros_like(e)
+    member = jnp.zeros(e.shape, dtype=jnp.bool_)
+    for idx, ce in enumerate(exponents):  # static unroll, K <= 16
+        hit = e == ce
+        code = jnp.where(hit, idx, code)
+        member = member | hit
+    esc_ref[...] = (~member).astype(jnp.uint8)
+
+    # pack two 4-bit codes per byte: (R, C) -> (R, C//2, 2) -> lo | hi<<4
+    r, c = code.shape
+    pairs = code.reshape(r, c // 2, 2)
+    packed_ref[...] = (pairs[..., 0] | (pairs[..., 1] << 4)).astype(jnp.uint8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("exponents", "fmt", "chunk", "block_rows", "interpret")
+)
+def encode_dense(
+    bits: jax.Array,
+    exponents: tuple,
+    fmt: str = "bf16",
+    chunk: int = 1024,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Dense encode of a (rows, chunk) bit tensor.
+
+    Returns (sign_mantissa u8[rows,chunk], packed u8[rows,chunk//2],
+    is_escape u8[rows,chunk]).
+    """
+    spec = FORMATS[fmt]
+    rows, c = bits.shape
+    if c != chunk:
+        raise ValueError(f"expected trailing dim == chunk ({chunk}), got {c}")
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows ({rows}) must divide block_rows ({br})")
+    grid = (rows // br,)
+    kernel = functools.partial(
+        _encode_kernel,
+        exponents=tuple(int(e) for e in exponents),
+        mbits=spec["mbits"],
+        ebits=spec["ebits"],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, chunk), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((br, chunk // 2), lambda i: (i, 0)),
+            pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, chunk), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, chunk // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, chunk), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(bits)

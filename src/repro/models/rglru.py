@@ -1,0 +1,118 @@
+"""Griffin / RecurrentGemma recurrent block: conv1d + RG-LRU.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = σ(W_a x_t + b_a)                      (recurrence gate)
+    i_t = σ(W_x x_t + b_x)                      (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t),  c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Prefill/train evaluates the linear recurrence with
+``jax.lax.associative_scan`` (log-depth, TPU-friendly); decode is the exact
+one-step update.  The recurrent state (B, lru_width) is the sequence-length-
+independent "KV cache" for the PD transfer path.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+RGLRU_C = 8.0
+
+
+def init_rglru_block(key, d_model: int, lru_width: int, conv_width: int):
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    su = lru_width ** -0.5
+    return {
+        "w_gate_branch": (jax.random.normal(ks[0], (d_model, lru_width)) * s).astype(jnp.bfloat16),
+        "w_in": (jax.random.normal(ks[1], (d_model, lru_width)) * s).astype(jnp.bfloat16),
+        "conv_w": (jax.random.normal(ks[2], (conv_width, lru_width)) * 0.1).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((lru_width,), jnp.bfloat16),
+        "w_a": (jax.random.normal(ks[3], (lru_width, lru_width)) * su).astype(jnp.bfloat16),
+        "b_a": jnp.zeros((lru_width,), jnp.float32),
+        "w_x": (jax.random.normal(ks[4], (lru_width, lru_width)) * su).astype(jnp.bfloat16),
+        "b_x": jnp.zeros((lru_width,), jnp.float32),
+        # Λ init so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix)
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, lru_width)) / RGLRU_C)),
+            jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (lru_width, d_model)) * su).astype(jnp.bfloat16),
+    }
+
+
+def _gates(p, x):
+    """x: (..., lru) post-conv activations -> (log_a, gated_input) fp32."""
+    r = jax.nn.sigmoid(jnp.einsum("...u,uv->...v", x, p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("...u,uv->...v", x, p["w_x"]).astype(jnp.float32) + p["b_x"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) in fp32, numerically guarded
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * x.astype(jnp.float32)
+
+
+def rglru_scan(p, x: jax.Array, h0: jax.Array | None = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, lru) -> (h (B, S, lru), final state (B, lru))."""
+    a, b = _gates(p, x)                     # (B, S, U) each, fp32
+
+    if h0 is not None:
+        # fold the initial state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        hh = hh[:, 1:]
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rglru_step(p, x_t: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x_t: (B, lru), h: (B, lru) -> (out, new_h)."""
+    a, b = _gates(p, x_t)
+    new_h = a * h.astype(jnp.float32) + b
+    return new_h.astype(x_t.dtype), new_h
+
+
+def _causal_conv(x, w, b):
+    width = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    return sum(pads[:, i: i + x.shape[1], :] * w[i] for i in range(width)) + b
+
+
+def recurrent_block_forward(p, x: jax.Array, state=None
+                            ) -> Tuple[jax.Array, dict]:
+    """Griffin recurrent block over a full sequence.
+
+    state (for continuation / transfer): {"h": (B, U) fp32,
+    "conv": (B, conv_width-1, U) rolling pre-conv inputs}."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,du->bsu", x, p["w_gate_branch"]))
+    u = jnp.einsum("bsd,du->bsu", x, p["w_in"])
+    uc = _causal_conv(u, p["conv_w"], p["conv_b"])
+    h0 = state["h"] if state is not None else None
+    hseq, h_last = rglru_scan(p, uc, h0=h0)
+    y = hseq * gate
+    out = jnp.einsum("bsu,ud->bsd", y, p["w_out"])
+    width = p["conv_w"].shape[0]
+    new_state = {"h": h_last, "conv": u[:, -(width - 1):, :]}
+    return out, new_state
+
+
+def recurrent_block_step(p, x: jax.Array, state: dict) -> Tuple[jax.Array, dict]:
+    """Single decode step: x (B, 1, D)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,du->bsu", x, p["w_gate_branch"]))[:, 0]
+    u = jnp.einsum("bsd,du->bsu", x, p["w_in"])[:, 0]              # (B, U)
+    window = jnp.concatenate([state["conv"], u[:, None, :]], axis=1)
+    uc = jnp.einsum("bwu,wu->bu", window, p["conv_w"]) + p["conv_b"]
+    h_out, h_new = rglru_step(p, uc, state["h"])
+    y = h_out * gate
+    out = jnp.einsum("bu,ud->bd", y, p["w_out"])[:, None, :]
+    return out, {"h": h_new, "conv": window[:, 1:, :]}

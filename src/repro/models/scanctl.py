@@ -1,0 +1,46 @@
+"""Scan wrapper with a cost-accounting mode that unrolls every loop.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, regardless of
+trip count, so any scan-over-layers (or scan-over-KV-blocks / SSD-chunks)
+model under-reports FLOPs/bytes/collectives by ~the trip count.  The dry-run
+therefore measures costs on *unrolled, reduced-depth* builds (see
+``repro.launch.dryrun``: compile at L1 and L2 layers with every scan unrolled,
+then extrapolate linearly in L) while memory/compile proofs still use the
+production scanned build.
+
+All model-side ``lax.scan`` calls go through :func:`scan` so the dry-run can
+flip them to ``unroll=True`` without touching model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_STATE = threading.local()
+
+
+def cost_mode_active() -> bool:
+    return getattr(_STATE, "unroll_all", False)
+
+
+@contextlib.contextmanager
+def cost_mode(on: bool = True):
+    """Within this context, every model scan is fully unrolled (cost
+    accounting builds only — never use for real execution or memory proofs:
+    unrolling changes buffer liveness and blows up HLO size)."""
+    prev = cost_mode_active()
+    _STATE.unroll_all = on
+    try:
+        yield
+    finally:
+        _STATE.unroll_all = prev
+
+
+def scan(f, init, xs, length=None, unroll=1):
+    """``jax.lax.scan`` that honours the cost-accounting mode."""
+    if cost_mode_active():
+        unroll = True
+    return jax.lax.scan(f, init, xs, length=length, unroll=unroll)

@@ -1,0 +1,215 @@
+"""Mamba-2 block: SSD (state-space duality) chunked scan + recurrent decode.
+
+Implements the SSD algorithm of arXiv:2405.21060 (§6): the sequence is split
+into chunks; intra-chunk terms are batched matmuls (MXU-friendly), inter-chunk
+terms reduce to a tiny state recurrence (lax.scan over chunks with carry
+(B, H, P, N)).  Decode is the exact single-step SSM recurrence.
+
+The transferred "KV cache" for PD serving is (ssm_state, conv_state) — both
+bf16, both SplitZip-compressible (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models import scanctl
+from repro.models.layers import rms_norm
+
+
+class SSMState(NamedTuple):
+    ssm: jax.Array        # (B, H, P, N) fp32 recurrent state
+    conv: jax.Array       # (B, conv_width-1, conv_channels) rolling buffer
+
+
+def _dims(d_model: int, cfg: SSMConfig):
+    d_inner = cfg.expand * d_model
+    heads = d_inner // cfg.head_dim
+    conv_ch = d_inner + 2 * cfg.n_groups * cfg.d_state
+    return d_inner, heads, conv_ch
+
+
+def init_mamba2(key, d_model: int, cfg: SSMConfig):
+    ks = jax.random.split(key, 6)
+    d_inner, heads, conv_ch = _dims(d_model, cfg)
+    proj_out = 2 * d_inner + 2 * cfg.n_groups * cfg.d_state + heads
+    s = d_model ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d_model, proj_out)) * s).astype(jnp.bfloat16),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch)) * 0.1).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((conv_ch,), jnp.bfloat16),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), jnp.bfloat16),
+        "out_proj": (jax.random.normal(ks[2], (d_inner, d_model)) * d_inner ** -0.5).astype(jnp.bfloat16),
+    }
+
+
+def _split_proj(zxbcdt, d_inner, n_groups, d_state, heads):
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: 2 * d_inner + 2 * n_groups * d_state]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n_groups * d_state:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over seq: (B, S, C) with (W, C) taps."""
+    width = w.shape[0]
+    pads = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pads[:, i: i + xbc.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def segsum_exp(dacs: jax.Array) -> jax.Array:
+    """exp(Σ decay) lower-triangular matrix within a chunk.
+
+    dacs: (..., L, H) inclusive cumsum of dA.  Returns (..., L, L, H) with
+    entry [i, j] = exp(dacs_i - dacs_j) for i >= j else 0."""
+    li = dacs[..., :, None, :] - dacs[..., None, :, :]
+    l_ = dacs.shape[-2]
+    mask = jnp.tril(jnp.ones((l_, l_), bool), 0)
+    # mask BEFORE exp: upper-triangular entries are large-positive and would
+    # overflow to inf (NaN gradients through the 0-multiply)
+    li = jnp.where(mask[..., :, :, None], li, -jnp.inf)
+    return jnp.exp(li)
+
+
+def ssd_scan(x, dt, a_log, b_mat, c_mat, cfg: SSMConfig,
+             initial_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x: (B, S, H, P)   inputs per head
+    dt: (B, S, H)     softplus'd step sizes
+    a_log: (H,)       A = -exp(a_log)
+    b_mat/c_mat: (B, S, G, N)
+    Returns (y (B, S, H, P), final_state (B, H, P, N))."""
+    bsz, s, h, p_ = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    q = cfg.chunk
+    pad = (-s) % q
+    if pad:
+        # zero-dt padding steps are exact no-ops: dA = 0 => decay 1, input 0
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // q
+    rep = h // g
+
+    a = -jnp.exp(a_log)                                   # (H,) negative
+    da = dt * a                                           # (B, S, H)
+    xd = x * dt[..., None]                                # discretized input
+
+    # reshape into chunks
+    xc = xd.reshape(bsz, nc, q, h, p_)
+    dac = da.reshape(bsz, nc, q, h)
+    bc = jnp.repeat(b_mat.reshape(bsz, nc, q, g, n), rep, axis=3)   # (B,C,Q,H,N)
+    cc = jnp.repeat(c_mat.reshape(bsz, nc, q, g, n), rep, axis=3)
+
+    dacs = jnp.cumsum(dac, axis=2)                        # (B, C, Q, H)
+
+    # 1) intra-chunk (diagonal blocks): Y_ii = (C_i B_j^T ∘ L_ij) X_j
+    cb = jnp.einsum("bclhn,bcmhn->bclmh", cc, bc, preferred_element_type=jnp.float32)
+    l_mat = segsum_exp(dacs)                              # (B, C, Q, Q, H)
+    y_diag = jnp.einsum("bclmh,bcmhp->bclhp", (cb * l_mat).astype(x.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    # 2) chunk states: right factors B^T diag(decay) X
+    decay_states = jnp.exp(dacs[:, :, -1:, :] - dacs)     # (B, C, Q, H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn",
+                        bc, decay_states.astype(bc.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    # 3) inter-chunk recurrence (small carry, lax.scan over chunks)
+    chunk_decay = jnp.exp(dacs[:, :, -1, :])              # (B, C, H)
+    s0 = (jnp.zeros((bsz, h, p_, n), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                                     # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * dec[:, :, None, None] + st
+        return new, prev                                  # emit state BEFORE this chunk
+
+    final, prev_states = scanctl.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B, C, H, P, N)
+
+    # 4) inter-chunk output: Y_off = C_i · S_prev · exp(dacs)
+    state_decay = jnp.exp(dacs)                           # decay from chunk start
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       cc, prev_states.astype(cc.dtype), state_decay.astype(cc.dtype),
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(bsz, s_pad, h, p_)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def mamba2_forward(p, x, cfg: SSMConfig, d_model: int,
+                   initial_state: SSMState | None = None
+                   ) -> Tuple[jax.Array, SSMState]:
+    """Full-sequence Mamba-2 block: (B, S, D) -> (B, S, D) + final state."""
+    d_inner, heads, conv_ch = _dims(d_model, cfg)
+    bsz, s, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt, d_inner, cfg.n_groups, cfg.d_state, heads)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_inner].reshape(bsz, s, heads, cfg.head_dim)
+    b_mat = xbc[..., d_inner: d_inner + cfg.n_groups * cfg.d_state] \
+        .reshape(bsz, s, cfg.n_groups, cfg.d_state)
+    c_mat = xbc[..., d_inner + cfg.n_groups * cfg.d_state:] \
+        .reshape(bsz, s, cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    init = initial_state.ssm if initial_state is not None else None
+    y, final = ssd_scan(xs, dt, p["A_log"], b_mat, c_mat, cfg, initial_state=init)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(bsz, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+
+    # conv state for decode continuation: last (width-1) PRE-conv xBC inputs
+    zxbcdt_tail = zxbcdt[:, -(cfg.conv_width - 1):, :]
+    _, xbc_tail, _ = _split_proj(zxbcdt_tail, d_inner, cfg.n_groups, cfg.d_state, heads)
+    return out, SSMState(ssm=final, conv=xbc_tail)
+
+
+def mamba2_decode(p, x, state: SSMState, cfg: SSMConfig, d_model: int
+                  ) -> Tuple[jax.Array, SSMState]:
+    """Single-token recurrence: x (B, 1, D)."""
+    d_inner, heads, conv_ch = _dims(d_model, cfg)
+    bsz = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])[:, 0]   # (B, K)
+    z, xbc_new, dt = _split_proj(zxbcdt, d_inner, cfg.n_groups, cfg.d_state, heads)
+
+    # causal conv over the rolling window
+    window = jnp.concatenate([state.conv, xbc_new[:, None, :]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    xs = xbc[..., :d_inner].reshape(bsz, heads, cfg.head_dim)
+    b_vec = xbc[..., d_inner: d_inner + cfg.n_groups * cfg.d_state] \
+        .reshape(bsz, cfg.n_groups, cfg.d_state)
+    c_vec = xbc[..., d_inner + cfg.n_groups * cfg.d_state:] \
+        .reshape(bsz, cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)                                          # (B, H)
+    rep = heads // cfg.n_groups
+    bh = jnp.repeat(b_vec, rep, axis=1)                           # (B, H, N)
+    ch = jnp.repeat(c_vec, rep, axis=1)
+    xd = (xs * dt[..., None]).astype(jnp.float32)
+    new_ssm = state.ssm * da[:, :, None, None] + \
+        jnp.einsum("bhp,bhn->bhpn", xd, bh.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, ch.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"])[:, None, :]
+    return out, SSMState(ssm=new_ssm, conv=window[:, 1:, :])

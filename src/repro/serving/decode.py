@@ -1,0 +1,47 @@
+"""Decode worker: consumes a (transferred) cache and generates tokens.
+
+``decode_loop`` runs N greedy steps with ``lax.scan`` so the whole generation
+is one XLA program; ``serve_step`` is the single-token unit the dry-run
+lowers for the decode_* shape cells.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.models.kvcache import DecodeState
+
+
+def serve_step(params, tokens: jax.Array, state: DecodeState, cfg: ArchConfig
+               ) -> Tuple[jax.Array, DecodeState]:
+    """One decode step: (B, 1) tokens -> ((B, V) logits, new state).
+    This is the function the decode-shape dry-run cells lower."""
+    return M.decode_step(params, tokens, state, cfg)
+
+
+def decode_loop(params, first_token: jax.Array, state: DecodeState,
+                cfg: ArchConfig, num_steps: int) -> Tuple[jax.Array, DecodeState]:
+    """Greedy generation of ``num_steps`` tokens as a single scan program."""
+
+    def step(carry, _):
+        tok, st = carry
+        logits, st = M.decode_step(params, tok[:, None], st, cfg)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, st), nxt
+
+    (_, final_state), toks = jax.lax.scan(
+        step, (first_token, state), None, length=num_steps)
+    return toks.T, final_state  # (B, num_steps)
+
+
+def make_decode_fn(cfg: ArchConfig, num_steps: int):
+    @jax.jit
+    def fn(params, first_token, state):
+        return decode_loop(params, first_token, state, cfg, num_steps)
+    return fn

@@ -1,0 +1,113 @@
+"""Disaggregated serving engine: prefill worker -> SplitZip transfer -> decode
+worker, as one orchestrated pipeline.
+
+Two operating modes:
+
+* **local** (tests, examples, CPU): both workers in-process; the transfer is a
+  real compress -> (simulated wire) -> decompress roundtrip through the
+  in-graph codec, so bit-exactness of the whole serving path is checked
+  end-to-end (paper Table 9).
+* **mesh** (dry-run, TPU): the transfer runs `transfer_cache_cross_pod`
+  (shard_map + ppermute over the pod axis); prefill/decode are pjit'd with
+  the sharding policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.codebook import Codebook
+from repro.core.pipeline import CodecProfile
+from repro.models import model as M
+from repro.models.kvcache import DecodeState, cache_bytes
+from repro.serving import transfer as T
+from repro.serving.decode import decode_loop
+from repro.serving.prefill import prefill_step
+
+
+@dataclasses.dataclass
+class EngineStats:
+    raw_cache_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    prefill_calls: int = 0
+    decode_tokens: int = 0
+    codec_ok: bool = True
+
+    @property
+    def transfer_ratio(self) -> float:
+        return self.raw_cache_bytes / max(self.wire_bytes, 1.0)
+
+
+class DisaggregatedEngine:
+    """Local-mode PD engine with a real compressed transfer stage."""
+
+    def __init__(self, cfg: ArchConfig, params, codebook: Codebook,
+                 *, compress: bool = True, chunk: int = 1024, cap: int = 64,
+                 profile: Optional[CodecProfile] = None):
+        self.cfg = cfg
+        self.params = params
+        self.tc = T.TransferConfig(codebook=codebook, chunk=chunk, cap=cap,
+                                   enabled=compress)
+        self.profile = profile
+        self.stats = EngineStats()
+
+    # -- the three pipeline stages ------------------------------------------
+    def prefill(self, batch: Dict, max_seq: Optional[int] = None):
+        out = prefill_step(self.params, batch, self.cfg, max_seq=max_seq)
+        self.stats.prefill_calls += 1
+        return out
+
+    def transfer(self, state: DecodeState) -> DecodeState:
+        """Compress -> ship -> decompress.  Bit-exact by construction.
+
+        Escape-capacity overflow (ct.ok == False) triggers the per-tensor raw
+        fallback: that tensor ships uncompressed (compressed_wire_bytes already
+        charges raw bytes for it), so losslessness is unconditional even on
+        adversarial activation distributions."""
+        raw = T.raw_wire_bytes(state.cache)
+        self.stats.raw_cache_bytes += raw
+        if not self.tc.enabled or not state.cache:
+            self.stats.wire_bytes += raw
+            return state
+        comp, rawleaves = T.compress_cache(state.cache, self.tc)
+        self.stats.wire_bytes += float(T.compressed_wire_bytes(comp, rawleaves))
+        self.stats.codec_ok &= all(bool(ct.ok) for ct in comp.values())
+        # raw fallback for overflowed tensors (detected via the ok flag; in
+        # the mesh path this is the off-graph re-fetch — see DESIGN.md §2)
+        overflowed = {k for k, ct in comp.items() if not bool(ct.ok)}
+        if overflowed:
+            flat = jax.tree_util.tree_flatten_with_path(state.cache)[0]
+            originals = {"/".join(str(getattr(k, "key", k)) for k in p): leaf
+                         for p, leaf in flat}
+            comp = {k: v for k, v in comp.items() if k not in overflowed}
+            rawleaves = dict(rawleaves,
+                             **{k: originals[k] for k in overflowed})
+        cache = T.decompress_cache(comp, rawleaves, state.cache)
+        return DecodeState(cache=cache, cache_len=state.cache_len)
+
+    def decode(self, first_token: jax.Array, state: DecodeState,
+               num_steps: int) -> jax.Array:
+        toks, _ = decode_loop(self.params, first_token, state, self.cfg, num_steps)
+        self.stats.decode_tokens += int(toks.size)
+        return toks
+
+    # -- end-to-end ----------------------------------------------------------
+    def generate(self, batch: Dict, num_steps: int,
+                 max_seq: Optional[int] = None) -> jax.Array:
+        """prompt batch -> (B, 1 + num_steps) generated ids (greedy)."""
+        pre = self.prefill(batch, max_seq=max_seq)
+        state = self.transfer(pre.state)
+        toks = self.decode(pre.first_token, state, num_steps)
+        return jnp.concatenate([pre.first_token[:, None], toks], axis=1)
+
+    def transfer_report(self) -> Optional[T.TransferReport]:
+        if self.profile is None:
+            return None
+        return T.transfer_report(self.stats.raw_cache_bytes,
+                                 self.stats.wire_bytes, self.profile)

@@ -1,0 +1,247 @@
+"""KV-cache transfer engine with SplitZip compression (the paper's setting).
+
+The PD boundary on a TPU mesh: prefill workers live on pod 0, decode workers
+on pod 1 of the (pod, data, model) mesh.  ``transfer_compressed`` maps the
+in-graph SplitZip codec over every bf16 cache leaf, moves the *compressed
+streams* across the pod axis with ``lax.ppermute`` inside ``shard_map``, and
+decodes on the receiving pod.  fp32 recurrent states (SSM/RG-LRU) ship raw
+(see DESIGN.md; a beyond-paper fp32 codec variant is tracked separately).
+
+Losslessness is unconditional: each tensor's ``ok`` flag (escape-capacity
+overflow) selects compressed vs raw payload per tensor, so adversarial
+activation distributions degrade to raw-speed transfer, never to corruption.
+
+Byte accounting for the roofline reads the ppermute operand sizes straight
+from the lowered HLO (analysis/roofline.py); the analytic model here
+(`transfer_report`) mirrors the paper's Fig. 3/4 accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import codec as C
+from repro.core.codebook import Codebook
+from repro.core.pipeline import CodecProfile, additive_transfer_time, native_transfer_time
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferConfig:
+    codebook: Codebook
+    chunk: int = C.DEFAULT_CHUNK
+    cap: int = C.DEFAULT_CAP
+    enabled: bool = True          # False => native raw-bytes baseline
+    compress_fp32: bool = False   # beyond-paper fp32-state codec toggle
+    layout: str = "chunked"       # 'chunked' (paper) | 'global' (beyond-paper)
+    global_budget: float = 0.01   # escape-capacity budget for layout='global'
+
+
+# ---------------------------------------------------------------------------
+# single-process codec application over a cache pytree
+# ---------------------------------------------------------------------------
+
+def compress_cache(cache: Dict, tc: TransferConfig) -> Tuple[Dict, Dict]:
+    """Returns (compressed pytree, passthrough pytree of non-bf16 leaves).
+
+    Each bf16 leaf becomes a CompressedTensor (pytree, jit-transparent).
+
+    ``compress_fp32`` (beyond-paper): an fp32 leaf splits into hi/lo u16
+    halves; the hi half has the BF16 bit layout (sign + exp8 + mantissa7),
+    so the SAME calibrated exponent codebook compresses it, while the lo
+    mantissa half ships raw — lossless fp32 at ratio 32/(16/rho+16) ≈ 1.14x.
+    This is what makes SplitZip useful for fp32 recurrent state transfer
+    (SSM/RG-LRU caches), where the paper's bf16-only codec gives zero."""
+    comp, raw = {}, {}
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", k)) for k in path)
+        def _cap(n):
+            cap = tc.cap
+            if tc.layout == "global" and cap == C.DEFAULT_CAP:
+                cap = C.default_global_cap(n, tc.global_budget)
+            return cap
+        if leaf.dtype == jnp.bfloat16 and tc.enabled:
+            comp[key] = C.encode(leaf, tc.codebook, chunk=tc.chunk,
+                                 cap=_cap(leaf.size), layout=tc.layout)
+        elif leaf.dtype == jnp.float32 and tc.enabled and tc.compress_fp32:
+            u = jax.lax.bitcast_convert_type(leaf, jnp.uint32)
+            hi = (u >> 16).astype(jnp.uint16)   # bf16-layout bits
+            lo = (u & 0xFFFF).astype(jnp.uint16)
+            comp[key + "#hi"] = C.encode(hi, tc.codebook, chunk=tc.chunk,
+                                         cap=_cap(hi.size), layout=tc.layout)
+            raw[key + "#lo"] = lo
+        else:
+            raw[key] = leaf
+    return comp, raw
+
+
+def decompress_cache(comp: Dict, raw: Dict, structure: Dict) -> Dict:
+    """Inverse of compress_cache against the original pytree structure."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(structure)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", k)) for k in path)
+        if key in comp:
+            leaves.append(C.decode(comp[key]).reshape(leaf.shape))
+        elif key + "#hi" in comp:  # fp32 hi/lo split
+            hi = C.decode(comp[key + "#hi"]).reshape(leaf.shape)
+            lo = raw[key + "#lo"]
+            u = (hi.astype(jnp.uint32) << 16) | lo.astype(jnp.uint32)
+            leaves.append(jax.lax.bitcast_convert_type(u, jnp.float32))
+        else:
+            leaves.append(raw[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def compressed_wire_bytes(comp: Dict, raw: Dict) -> jax.Array:
+    total = jnp.zeros((), jnp.float32)
+    for ct in comp.values():
+        # per-tensor fallback: raw bytes if the escape buffer overflowed
+        total = total + jnp.where(C.compressed_bytes(ct) * 0 + ct.ok,
+                                  C.compressed_bytes(ct),
+                                  jnp.float32(C.raw_bytes(ct)))
+    for leaf in raw.values():
+        total = total + leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def raw_wire_bytes(cache: Dict) -> float:
+    return float(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)))
+
+
+# ---------------------------------------------------------------------------
+# cross-pod transfer (shard_map + ppermute over the 'pod' axis)
+# ---------------------------------------------------------------------------
+
+_WIRE_INT = {2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+def _permute_leaf(x: jax.Array, axis_name: str, src: int, dst: int) -> jax.Array:
+    """ppermute with the payload pinned to its exact bit width.
+
+    XLA CPU (and some TPU paths) upcast bf16 collectives to f32 — doubling the
+    wire bytes and silently defeating the codec.  Bitcasting to a same-width
+    integer type before the collective guarantees the HLO moves exactly the
+    bytes we account for; the roundtrip is a bitcast, hence lossless."""
+    if jnp.issubdtype(x.dtype, jnp.floating) and x.dtype.itemsize in _WIRE_INT:
+        w = _WIRE_INT[x.dtype.itemsize]
+        y = jax.lax.ppermute(jax.lax.bitcast_convert_type(x, w), axis_name,
+                             perm=[(src, dst)])
+        return jax.lax.bitcast_convert_type(y, x.dtype)
+    return jax.lax.ppermute(x, axis_name, perm=[(src, dst)])
+
+
+def transfer_cache_cross_pod(
+    cache: Dict,
+    mesh: Mesh,
+    tc: TransferConfig,
+    src_pod: int = 0,
+    dst_pod: int = 1,
+    return_hlo: bool = False,
+    specs=None,
+    select_dst: bool = True,
+):
+    """Move a cache pytree from src_pod to dst_pod, compressed on the wire.
+
+    Inside shard_map over the 'pod' axis: encode locally on the source pod,
+    ppermute only the *compressed streams* (the collective bytes visible in
+    HLO are the compressed payload), decode on the destination pod.  The
+    data/model sharding of each leaf is preserved end-to-end.
+    """
+    if "pod" not in mesh.shape:
+        raise ValueError("transfer_cache_cross_pod needs a 'pod' mesh axis")
+    n_pod = mesh.shape["pod"]
+
+    def leaf_spec(x):
+        # cache leaves: (L, B, S, ...) — batch over data, replicated over
+        # pod/model (the host-staged value; prefill pod is the logical owner)
+        spec = [None] * x.ndim
+        if x.ndim >= 2 and x.shape[1] % mesh.shape["data"] == 0:
+            spec[1] = "data"
+        return P(*spec)
+
+    # per-leaf inner function: runs per pod-shard with pod axis bound.
+    # Output gets a fresh leading 'pod' axis so each pod's post-transfer view
+    # is explicit: index dst_pod holds the decoded cache, index src_pod holds
+    # whatever the non-receiving pod decodes from its zero-filled streams.
+    def body(*leaves_flat):
+        treedef = jax.tree_util.tree_structure(cache)
+        local = jax.tree_util.tree_unflatten(treedef, leaves_flat)
+        comp, raw = compress_cache(local, tc)
+        moved_comp = jax.tree.map(
+            lambda x: _permute_leaf(x, "pod", src_pod, dst_pod), comp)
+        moved_raw = jax.tree.map(
+            lambda x: _permute_leaf(x, "pod", src_pod, dst_pod), raw)
+        out = decompress_cache(moved_comp, moved_raw, local)
+        return tuple(x[None] for x in jax.tree.leaves(out))
+
+    leaves = jax.tree.leaves(cache)
+    if specs is not None:  # caller-provided (e.g. the sharding policy's
+        in_specs = tuple(jax.tree.leaves(specs,
+                                         is_leaf=lambda x: isinstance(x, P)))
+    else:
+        in_specs = tuple(leaf_spec(x) for x in leaves)
+    out_specs = tuple(P("pod", *s) for s in in_specs)
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+    moved = fn(*leaves)
+    if select_dst:
+        # convenience view for eager callers (tests/examples).  Inside a jit
+        # this slice forces GSPMD to bounce the DECODED cache back across the
+        # pod axis — production consumers (and the dry-run) keep the cache
+        # pod-resident: pass select_dst=False and read index dst_pod locally.
+        moved = tuple(x[dst_pod] for x in moved)
+    out = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(cache), moved)
+    if return_hlo:
+        # post-SPMD HLO: the collective-permute operand sizes here are the
+        # actual wire bytes (compressed when tc.enabled)
+        hlo = jax.jit(fn).lower(*leaves).compile().as_text()
+        return out, hlo
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analytic transfer report (paper Fig. 3 / Fig. 4 accounting)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransferReport:
+    raw_bytes: float
+    wire_bytes: float
+    t_native: float
+    t_splitzip: float
+    t_encode: float
+    t_transfer: float
+    t_decode: float
+
+    @property
+    def ratio(self) -> float:
+        return self.raw_bytes / max(self.wire_bytes, 1.0)
+
+    @property
+    def speedup(self) -> float:
+        return self.t_native / max(self.t_splitzip, 1e-12)
+
+
+def transfer_report(raw_bytes: float, wire_bytes: float,
+                    profile: CodecProfile) -> TransferReport:
+    """Additive accounting: encode + compressed transfer + decode (Fig. 4)."""
+    t_enc = raw_bytes / profile.g_enc
+    t_dec = raw_bytes / profile.g_dec
+    t_xfer = wire_bytes / profile.link_bw
+    return TransferReport(
+        raw_bytes=raw_bytes,
+        wire_bytes=wire_bytes,
+        t_native=raw_bytes / profile.link_bw + profile.fixed_overhead_s,
+        t_splitzip=t_enc + t_xfer + t_dec + profile.fixed_overhead_s,
+        t_encode=t_enc, t_transfer=t_xfer, t_decode=t_dec,
+    )

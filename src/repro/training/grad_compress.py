@@ -1,0 +1,111 @@
+"""Compressed cross-pod gradient all-reduce (beyond-paper feature).
+
+Hierarchical DP at multi-pod scale: within a pod, gradient reduction rides
+the fast ICI (XLA's automatic all-reduce); *across* pods it crosses slow DCN.
+Since pod-level gradients are bf16, the SplitZip codec applies verbatim —
+**lossless**, so unlike lossy gradient compression (top-k, 1-bit Adam, ...)
+it changes no optimization semantics; the only numerics are the same bf16
+adds any all-reduce performs.
+
+Mechanics: the caller produces *pod-partial* gradients with a leading pod dim
+(via vmap over a pod-split batch — see train_step.py).  ``compressed_cross_pod_mean``
+runs a shard_map over the mesh: each pod encodes its partial, a rotating-ring
+exchange moves only the **compressed streams** over the pod axis (n_pod - 1
+hops), each hop decodes + accumulates in fp32.  The ppermute operand bytes in
+the lowered HLO shrink by ~1/rho vs a raw DCN all-reduce — this is the number
+the roofline's collective term scores.
+
+Leaves smaller than ``min_compress_elems`` ship raw (codec framing would not
+pay for itself).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import codec as C
+from repro.core.codebook import Codebook
+
+MIN_COMPRESS_ELEMS = 16384
+
+# A gradient-tuned default codebook: bf16 gradients of normalized networks
+# concentrate in small-magnitude exponents.  Refreshed by calibrate_on_grads.
+DEFAULT_GRAD_CODEBOOK = Codebook(fmt="bf16", exponents=tuple(range(112, 128)))
+
+
+def calibrate_on_grads(grads, k: int = 16) -> Codebook:
+    """Offline calibration pass over a representative gradient pytree."""
+    import numpy as np
+    from repro.core import codebook as cbm
+    leaves = [np.asarray(jax.lax.bitcast_convert_type(
+        g.astype(jnp.bfloat16), jnp.uint16)).ravel()
+        for g in jax.tree.leaves(grads)]
+    return cbm.calibrate(leaves, k=k)
+
+
+def _ring_exchange_sum(x: jax.Array, codebook: Codebook, n_pod: int,
+                       compress: bool) -> jax.Array:
+    """Inside shard_map: rotate this pod's contribution around the ring,
+    accumulating in fp32.  x: the local pod-partial gradient (bf16)."""
+    perm = [(i, (i + 1) % n_pod) for i in range(n_pod)]
+    acc = x.astype(jnp.float32)
+    rotating = x
+    for _ in range(n_pod - 1):
+        if compress:
+            ct = C.encode(rotating, codebook)
+            moved = jax.tree.map(
+                lambda s: jax.lax.ppermute(s, "pod", perm), ct)
+            rotating = C.decode(moved)
+        else:
+            rotating = jax.lax.ppermute(rotating, "pod", perm)
+        acc = acc + rotating.astype(jnp.float32)
+    return acc
+
+
+def compressed_cross_pod_mean(grads_stacked, mesh: Mesh,
+                              codebook: Codebook = DEFAULT_GRAD_CODEBOOK,
+                              compress: bool = True):
+    """(n_pod, ...)-stacked pod-partial grads -> pod-replicated mean grads.
+
+    Input leaves are sharded P('pod', *param_spec); output leaves drop the pod
+    dim and are replicated across pods (every pod computed the same sum)."""
+    if "pod" not in mesh.shape:
+        # single-pod mesh: nothing to exchange, just average the leading dim
+        return jax.tree.map(lambda g: jnp.mean(g.astype(jnp.float32), axis=0)
+                            .astype(g.dtype), grads_stacked)
+    n_pod = mesh.shape["pod"]
+
+    leaves = jax.tree.leaves(grads_stacked)
+    treedef = jax.tree_util.tree_structure(grads_stacked)
+
+    in_specs = tuple(P("pod") for _ in leaves)
+    out_specs = tuple(P() for _ in leaves)
+
+    def body(*local_leaves):
+        out = []
+        for lf in local_leaves:
+            x = lf[0]  # local pod slice, leading dim 1
+            do_compress = compress and x.size >= MIN_COMPRESS_ELEMS \
+                and x.dtype == jnp.bfloat16
+            total = _ring_exchange_sum(x.astype(jnp.bfloat16), codebook,
+                                       n_pod, do_compress)
+            out.append((total / n_pod).astype(x.dtype))
+        return tuple(out)
+
+    summed = shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)(*leaves)
+    return jax.tree_util.tree_unflatten(treedef, summed)
+
+
+def cross_pod_wire_bytes(grads, ratio: float = 4 / 3, n_pod: int = 2,
+                         compress: bool = True) -> float:
+    """Analytic DCN bytes per step for the ring exchange (for reports)."""
+    total = sum(g.size * 2 for g in jax.tree.leaves(grads))  # bf16 bytes
+    per_hop = total / ratio if compress else total
+    return per_hop * (n_pod - 1)

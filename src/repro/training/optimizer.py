@@ -1,0 +1,98 @@
+"""AdamW built from scratch in JAX (no optax dependency).
+
+State layout mirrors the params pytree (m, v per leaf) so the sharding rules
+apply transparently — optimizer state shards exactly like the parameters.
+Moments are fp32 regardless of param dtype (bf16 master-less training with
+fp32 optimizer state, the standard large-scale recipe).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () int32
+    m: Any                   # pytree like params, fp32
+    v: Any                   # pytree like params, fp32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms / biases / 1-D params (standard recipe)."""
+    leaf = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+    return not any(s in leaf for s in ("norm", "bias", "lam", "dt_bias", "A_log", "D"))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params
+           ) -> Tuple[Any, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state.v, grads)
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_m = jax.tree.leaves(new_m)
+    flat_v = jax.tree.leaves(new_v)
+    out = []
+    for (path, p), m, v in zip(flat_p, flat_m, flat_v):
+        mhat = m / bc1
+        vhat = v / bc2
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        out.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+    new_params = jax.tree_util.tree_unflatten(treedef, out)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), metrics

@@ -1,0 +1,107 @@
+"""Flash-attention Pallas kernel vs the jnp oracle (interpret mode on CPU).
+
+Sweeps shapes (incl. GQA groupings, MLA-style dv != d, non-divisible sequence
+lengths that exercise padding) and dtypes, causal and bidirectional, plus a
+hypothesis property test on random shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import attention_ref
+from repro.models import layers as L
+
+TOL = {jnp.bfloat16: 3e-2, jnp.float32: 2e-5}
+
+
+def make(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+def check(b, sq, skv, h, hkv, d, dv, dtype, causal, blk_q=64, blk_k=64):
+    q = make((b, sq, h, d), dtype, 1)
+    k = make((b, skv, hkv, d), dtype, 2)
+    v = make((b, skv, hkv, dv), dtype, 3)
+    out = flash_attention(q, k, v, causal=causal, blk_q=blk_q, blk_k=blk_k)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+class TestShapes:
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_mha(self, dtype, causal):
+        check(2, 128, 128, 4, 4, 64, 64, dtype, causal)
+
+    @pytest.mark.parametrize("g", [2, 4, 8])
+    def test_gqa_groups(self, g):
+        check(1, 128, 128, 8, 8 // g, 32, 32, jnp.bfloat16, True)
+
+    def test_mqa(self):
+        check(2, 128, 128, 8, 1, 64, 64, jnp.bfloat16, True)
+
+    def test_mla_value_dim(self):
+        # MLA: value head dim differs from qk head dim
+        check(1, 128, 128, 4, 4, 96, 64, jnp.bfloat16, True)
+
+    @pytest.mark.parametrize("sq", [65, 100, 127, 200])
+    def test_ragged_seq_padding(self, sq):
+        check(1, sq, sq, 4, 2, 32, 32, jnp.bfloat16, True)
+
+    def test_cross_attention_lengths(self):
+        check(1, 64, 192, 4, 2, 32, 32, jnp.bfloat16, False)
+
+    @pytest.mark.parametrize("blk", [(32, 32), (64, 128), (128, 64)])
+    def test_block_shapes(self, blk):
+        check(1, 256, 256, 4, 2, 32, 32, jnp.bfloat16, True,
+              blk_q=blk[0], blk_k=blk[1])
+
+
+class TestConsistency:
+    def test_matches_chunked_attention(self):
+        """The XLA path (models/layers.chunked_attention) and the kernel are
+        independent implementations; they must agree."""
+        q = make((2, 128, 8, 64), jnp.bfloat16, 5)
+        k = make((2, 128, 2, 64), jnp.bfloat16, 6)
+        v = make((2, 128, 2, 64), jnp.bfloat16, 7)
+        a = flash_attention(q, k, v, causal=True, blk_q=64, blk_k=64)
+        b = L.chunked_attention(q, k, v, causal=True, kv_block=64)
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=3e-2, rtol=3e-2)
+
+    def test_numerical_stability_large_scores(self):
+        # online softmax must not overflow on large logits
+        q = make((1, 64, 2, 32), jnp.float32, 8) * 30
+        k = make((1, 64, 2, 32), jnp.float32, 9) * 30
+        v = make((1, 64, 2, 32), jnp.float32, 10)
+        out = flash_attention(q, k, v, causal=True, blk_q=32, blk_k=32)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        ref = attention_ref(q, k, v, causal=True)
+        # online (two-pass) softmax reorders f32 ops; at |logit| ~ 900 the
+        # divergence vs the direct oracle is ~5e-4 — finite and stable
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-3, rtol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    sq=st.integers(8, 96),
+    h=st.sampled_from([2, 4, 8]),
+    g=st.sampled_from([1, 2]),
+    d=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+)
+def test_property_random_shapes(b, sq, h, g, d, causal):
+    hkv = max(1, h // g)
+    h = hkv * g
+    check(b, sq, sq, h, hkv, d, d, jnp.float32, causal, blk_q=32, blk_k=32)

@@ -1,0 +1,71 @@
+"""Wire codec: byte-exact serialization, size model, cross-codec agreement."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import codebook as cbm
+from repro.core import wire
+
+
+def _realistic_bits(n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n) * np.exp(rng.standard_normal(n))).astype(np.float32)
+    return (x.view(np.uint32) >> 16).astype(np.uint16)
+
+
+@pytest.mark.parametrize("fmt,k", [("bf16", 16), ("bf16", 8), ("fp8_e5m2", 16),
+                                   ("fp8_e5m2", 8), ("fp8_e4m3", 8)])
+def test_roundtrip_and_size_model(fmt, k):
+    rng = np.random.default_rng(5)
+    if fmt == "bf16":
+        bits = _realistic_bits(50_001, seed=5)
+    else:
+        bits = rng.integers(0, 256, 50_001).astype(np.uint8)
+    cb = cbm.calibrate([bits], k=k, fmt=fmt)
+    payload, stats = wire.encode(bits, cb)
+    assert np.array_equal(wire.decode(payload), bits)
+    assert wire.payload_bytes_model(stats.n_elements, stats.n_escapes, fmt, k) == len(payload)
+
+
+def test_bf16_ratio_near_four_thirds():
+    bits = _realistic_bits(1 << 20, seed=6)
+    cb = cbm.calibrate([bits], k=16)
+    _, stats = wire.encode(bits, cb)
+    assert 1.25 < stats.ratio < 4 / 3 + 1e-6
+
+
+def test_wire_matches_ingraph_byte_accounting():
+    """Wire payload minus fixed header == in-graph analytic bytes."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import codec
+
+    bits = _realistic_bits(64 * 1024, seed=7)
+    cb = cbm.calibrate([bits], k=16)
+    payload, stats = wire.encode(bits, cb)
+    x = jax.lax.bitcast_convert_type(jnp.asarray(bits), jnp.bfloat16)
+    ct = codec.encode(x, cb, cap=1024)
+    ingraph = float(codec.compressed_bytes(ct))
+    header = wire._HEADER.size + cb.k + 4 * (64 * 1024 // wire.DEFAULT_CHUNK)
+    assert ingraph == pytest.approx(len(payload) - header)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.binary(min_size=2, max_size=4096))
+def test_property_wire_roundtrip_arbitrary_bytes(data):
+    n = len(data) // 2
+    if n == 0:
+        return
+    bits = np.frombuffer(data[: 2 * n], dtype=np.uint16)
+    cb = cbm.Codebook(fmt="bf16", exponents=tuple(range(16)))
+    payload, _ = wire.encode(bits, cb)
+    assert np.array_equal(wire.decode(payload), bits)
+
+
+def test_empty_tensor():
+    cb = cbm.Codebook(fmt="bf16", exponents=tuple(range(16)))
+    payload, stats = wire.encode(np.zeros(0, np.uint16), cb)
+    assert np.array_equal(wire.decode(payload), np.zeros(0, np.uint16))
+    assert stats.n_elements == 0
