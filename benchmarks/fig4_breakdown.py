@@ -15,12 +15,15 @@ the paper's own Fig. 4 numbers, and reproduce them closely.
 
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from benchmarks.common import bench_config, generate_kv_bits, pooled_bits
 from repro.configs.base import get_config
 from repro.core import codebook as cbm
-from repro.core import wire
-from repro.core.pipeline import CodecProfile
-from repro.serving.transfer import transfer_report
+from repro.core.pipeline import CodecProfile, pipelined_transfer_time
+from repro.serving.transfer import TransferConfig, transfer_report
+
+N_CHUNKS = 8  # pipelined-engine granularity (transfer_cache_chunked default)
 
 FIXED = 5e-3  # per-transfer fixed cost at batch granularity
 
@@ -38,8 +41,10 @@ def run(emit) -> None:
     bits = pooled_bits(generate_kv_bits(bench_config("qwen3-32b"),
                                         seq=256, batch=2))
     cb = cbm.calibrate([bits], k=16)
-    _, stats = wire.encode(bits, cb)
-    rho = stats.ratio
+    # measured rho via the byte-exact host backend of the codec registry
+    be = TransferConfig(codebook=cb, backend="wire").get_backend()
+    ct = be.encode(jnp.asarray(bits), cb)
+    rho = be.raw_bytes(ct) / float(be.wire_bytes(ct))
     bpt = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
     for label, link_bw, par in SETTINGS:
         profile = CodecProfile(g_enc=613.3e9 * par, g_dec=2181.8e9 * par,
@@ -49,13 +54,17 @@ def run(emit) -> None:
             raw = float(bpt) * seq * 16
             rep = transfer_report(raw, raw / rho, profile)
             total = rep.t_splitzip
+            # chunked pipelined engine: encode/transfer/decode overlap
+            t_pipe = pipelined_transfer_time(raw, profile, N_CHUNKS)
             row = dict(
                 t_native_ms=round(rep.t_native * 1e3, 2),
                 t_splitzip_ms=round(total * 1e3, 2),
+                t_pipelined_ms=round(t_pipe * 1e3, 2),
                 frac_encode=round(rep.t_encode / total, 4),
                 frac_transfer=round(rep.t_transfer / total, 4),
                 frac_decode=round(rep.t_decode / total, 4),
-                speedup=round(rep.speedup, 4))
+                speedup=round(rep.speedup, 4),
+                speedup_pipelined=round(rep.t_native / t_pipe, 4))
             if label == "fitted":
                 row["paper_native_ms"], row["paper_splitzip_ms"] = PAPER_FIG4[seq]
             emit("fig4", f"{label}/seq{seq}", row)

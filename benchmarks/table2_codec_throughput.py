@@ -8,13 +8,18 @@ the encode+decode path, and the sentinel variant loses decode throughput).
 
 Codecs measured:
   splitzip-wire   : numpy wire codec (production host path)
-  splitzip-jax    : jitted in-graph codec (the XLA/TPU path, run on CPU)
-  splitzip-kernel : Pallas kernels in interpret mode (correctness path;
+  splitzip-xla    : jitted in-graph codec (the XLA/TPU path, run on CPU)
+  splitzip-pallas : Pallas kernels in interpret mode (correctness path;
                     interpret-mode timing is reported but flagged)
   top15-sentinel  : ZipServ-class fixed coding (ablation twin of Table 6)
   huffman-exp     : DFloat11/ZipNN-class exponent Huffman
   deflate         : zlib level 1 (nvCOMP-LZ4-class)
   cascaded        : byte-plane + delta + entropy stage (nvCOMP-Cascaded-class)
+
+The three SplitZip rows are driven through the codec-backend registry
+(``TransferConfig.backend`` -> :mod:`repro.core.backend`), the same dispatch
+the serving engine uses — a backend added to the registry shows up here with
+zero benchmark changes.
 """
 
 from __future__ import annotations
@@ -28,7 +33,9 @@ from benchmarks.common import (CodecResult, bench_config, cascaded_roundtrip,
                                huffman_exponent_roundtrip, pooled_bits, time_fn)
 from repro.core import codebook as cbm
 from repro.core import codec as C
-from repro.core import wire
+from repro.serving.transfer import TransferConfig
+
+SPLITZIP_BACKENDS = ("wire", "xla", "pallas")
 
 WORKLOAD_ELEMS = 1 << 22  # 8 MiB of bf16 — CPU-scale stand-in for the 256MB
 
@@ -47,26 +54,25 @@ def run(emit) -> None:
     cb = cbm.calibrate([bits], k=16)
     results = []
 
-    # --- splitzip wire (numpy host path) -----------------------------------
-    payload, stats = wire.encode(bits, cb)
-    assert np.array_equal(wire.decode(payload), bits)
-    t_enc, s_enc = time_fn(lambda: wire.encode(bits, cb), repeats=5)
-    t_dec, s_dec = time_fn(lambda: wire.decode(payload), repeats=5)
-    results.append(CodecResult("splitzip-wire", stats.ratio,
-                               gbps(nbytes, t_enc), gbps(nbytes, t_dec)))
-
-    # --- splitzip in-graph (jitted XLA path) --------------------------------
+    # --- splitzip via the codec-backend registry ---------------------------
     x = jax.lax.bitcast_convert_type(jnp.asarray(bits), jnp.bfloat16)
-    enc_j = jax.jit(lambda v: C.encode(v, cb))
-    ct = enc_j(x)
-    dec_j = jax.jit(C.decode)
-    y = dec_j(ct)
-    assert bool(jnp.all(jax.lax.bitcast_convert_type(y, jnp.uint16)
-                        == jnp.asarray(bits)))
-    t_enc, _ = time_fn(lambda: enc_j(x), repeats=5)
-    t_dec, _ = time_fn(lambda: dec_j(ct), repeats=5)
-    results.append(CodecResult("splitzip-jax", float(C.compression_ratio(ct)),
-                               gbps(nbytes, t_enc), gbps(nbytes, t_dec)))
+    for bname in SPLITZIP_BACKENDS:
+        be = TransferConfig(codebook=cb, backend=bname).get_backend()
+        if be.jittable:
+            enc_f = jax.jit(lambda v, _be=be: _be.encode(v, cb))
+            dec_f = jax.jit(lambda c, _be=be: _be.decode(c))
+        else:
+            enc_f = lambda v, _be=be: _be.encode(v, cb)
+            dec_f = lambda c, _be=be: _be.decode(c)
+        ct = enc_f(x)
+        y = dec_f(ct)
+        assert bool(jnp.all(jax.lax.bitcast_convert_type(
+            jnp.asarray(y).reshape(-1), jnp.uint16) == jnp.asarray(bits)))
+        ratio = be.raw_bytes(ct) / float(be.wire_bytes(ct))
+        t_enc, _ = time_fn(lambda: enc_f(x), repeats=5)
+        t_dec, _ = time_fn(lambda: dec_f(ct), repeats=5)
+        results.append(CodecResult(f"splitzip-{bname}", ratio,
+                                   gbps(nbytes, t_enc), gbps(nbytes, t_dec)))
 
     # --- top-15 + sentinel (ZipServ-class) ----------------------------------
     enc_s = jax.jit(lambda v: C.encode_sentinel(v, cb))

@@ -9,6 +9,10 @@ Walks the paper's core pipeline (§3.2-3.3) on a KV-shaped BF16 tensor:
   5. the same roundtrip through the Pallas TPU kernels (interpret on CPU),
   6. the variable-length wire format used off-graph (checkpoints, RPC).
 
+Steps 2-6 all go through the pluggable codec-backend registry
+(``repro.core.backend``: ``xla`` / ``pallas`` / ``wire``) — the same dispatch
+the serving engine uses via ``TransferConfig.backend``.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -17,9 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codebook as cbm
-from repro.core import codec, wire
+from repro.core import codec
+from repro.core.backend import get_backend
 from repro.core.pipeline import CodecProfile, hiding_bandwidth, speedup
-from repro.kernels import ops as kops
 
 
 def main():
@@ -42,37 +46,41 @@ def main():
           f"(paper Table 1: 2.89-3.59 bits)")
     print(f"top-16 coverage  : {100 * cbm.coverage(cb, np.asarray(kv_bits)):.2f}%")
 
-    # --- 2) in-graph encode (jittable, shardable) ----------------------------
-    ct = jax.jit(lambda t: codec.encode(t, cb), static_argnums=())(kv)
+    # --- 2) in-graph encode (jittable, shardable) — backend 'xla' ------------
+    be_xla = get_backend("xla")
+    ct = jax.jit(lambda t: be_xla.encode(t, cb))(kv)
     n, m = kv.size, int(jnp.sum(ct.esc_count))
-    got = float(codec.compressed_bytes(ct))
+    got = float(be_xla.wire_bytes(ct))
     model = n * 1.5 + 3 * m
     print(f"\nencoded: N={n} elements, M={m} escapes "
-          f"(rate {m / n:.4%}, capacity ok={bool(ct.ok)})")
+          f"(rate {m / n:.4%}, capacity ok={bool(be_xla.ok(ct))})")
     print(f"bytes: raw={2 * n}  compressed={got:.0f}  "
           f"(paper model N(3/2)+3M = {model:.0f})")
     print(f"compression ratio: {float(codec.compression_ratio(ct)):.3f}x "
           f"(paper: 1.324x on Qwen3-32B; limit 4/3 = {4 / 3:.3f}x)")
 
     # --- 3) bit-exact decode --------------------------------------------------
-    y = jax.jit(codec.decode)(ct)
+    y = jax.jit(be_xla.decode)(ct)
     same = bool(jnp.all(kv_bits == jax.lax.bitcast_convert_type(y, jnp.uint16)))
-    print(f"bit-exact roundtrip (XLA codec): {same}")
+    print(f"bit-exact roundtrip (backend 'xla'): {same}")
     assert same
 
     # --- 4) the Pallas TPU kernel path (interpret=True on CPU) ---------------
-    ct_k = kops.encode(kv, cb)
-    y_k = kops.decode(ct_k)
+    be_pl = get_backend("pallas")
+    y_k = be_pl.decode(be_pl.encode(kv, cb))
     same_k = bool(jnp.all(kv_bits == jax.lax.bitcast_convert_type(y_k, jnp.uint16)))
-    print(f"bit-exact roundtrip (Pallas kernels): {same_k}")
+    print(f"bit-exact roundtrip (backend 'pallas'): {same_k}")
     assert same_k
 
-    # --- 5) variable-length wire format (off-graph) --------------------------
-    payload, stats = wire.encode(np.asarray(kv_bits).ravel(), cb)
-    back = wire.decode(payload)
-    assert np.array_equal(back, np.asarray(kv_bits).ravel())
-    print(f"\nwire format: {stats.ratio:.3f}x over {len(payload)} bytes "
-          f"(escape rate {stats.escape_rate:.4%}) — bit-exact")
+    # --- 5) variable-length wire format (off-graph) — backend 'wire' ---------
+    be_w = get_backend("wire")
+    ct_w = be_w.encode(kv, cb)
+    back = be_w.decode(ct_w)
+    assert np.array_equal(np.asarray(jax.lax.bitcast_convert_type(back, jnp.uint16)),
+                          np.asarray(kv_bits))
+    print(f"\nwire format: {be_w.raw_bytes(ct_w) / be_w.wire_bytes(ct_w):.3f}x "
+          f"over {int(be_w.wire_bytes(ct_w))} bytes "
+          f"(escape rate {ct_w.stats.escape_rate:.4%}) — bit-exact")
 
     # --- 6) when does the codec pay off? (paper Appendix A) ------------------
     prof = CodecProfile(g_enc=613.3e9, g_dec=2181.8e9, ratio=1.324,

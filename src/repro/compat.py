@@ -1,0 +1,33 @@
+"""Cross-version jax compatibility shims.
+
+The repo targets a range of jax releases: on recent jax ``shard_map`` is a
+top-level export (``jax.shard_map``) whose replication check is spelled
+``check_vma``; on older releases it lives in ``jax.experimental.shard_map``
+and the same knob is spelled ``check_rep``.  Everything in this repo that
+needs ``shard_map`` imports it from here and always writes the modern
+``check_vma=...`` spelling; the shim maps it to whatever the installed jax
+understands.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:  # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` rename papered
+    over (pass either; the installed jax receives the one it knows)."""
+    for new, old in (("check_vma", "check_rep"),):
+        if new in kwargs and new not in _SHARD_MAP_PARAMS:
+            kwargs[old] = kwargs.pop(new)
+        elif old in kwargs and old not in _SHARD_MAP_PARAMS:
+            kwargs[new] = kwargs.pop(old)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -1,5 +1,12 @@
-"""SplitZip core: calibration, in-graph codec, wire codec, FP8, pipeline model."""
+"""SplitZip core: calibration, in-graph codec, wire codec, FP8, pipeline
+model, and the pluggable codec-backend registry (``core/backend.py``)."""
 
+from repro.core.backend import (  # noqa: F401
+    CodecBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
 from repro.core.codebook import (  # noqa: F401
     Codebook,
     calibrate,

@@ -1,0 +1,191 @@
+"""Pluggable SplitZip codec backends (ZipServ-style hardware-aware dispatch).
+
+One logical codec, several physical implementations.  Every serving-path
+consumer (transfer engine, ``DisaggregatedEngine``, cross-pod transfer,
+benchmarks, examples) selects its implementation through this registry via
+``TransferConfig.backend`` instead of importing a codec module directly, so
+adding a real GPU/TPU backend later is a registration, not a refactor.
+
+Built-in backends:
+
+  xla     : the pure-jnp reference codec (:mod:`repro.core.codec`) — jittable,
+            shardable, runs anywhere XLA runs.  The default.
+  pallas  : the Pallas TPU kernels (:mod:`repro.kernels.ops`) for the dense
+            encode/decode stages plus the XLA escape compaction.  Compiles to
+            Mosaic on TPU; runs in ``interpret=True`` mode on CPU, which is
+            how parity is validated in this container.
+  wire    : the host numpy codec (:mod:`repro.core.wire`) — true
+            variable-length byte serialization.  Not jittable (host-side
+            bytes), but unconditionally lossless: the wire format has no
+            escape-capacity limit, so ``ok`` is always True.
+
+Interface contract: ``encode`` returns an opaque per-backend compressed
+object; ``decode`` inverts it bit-exactly; ``ok``/``wire_bytes``/``raw_bytes``
+give the transfer engine a uniform view for the per-tensor raw-fallback
+accounting (``jnp.where(ok, wire_bytes, raw_bytes)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec as C
+from repro.core import wire as W
+from repro.core.codebook import FORMATS, Codebook
+
+
+class CodecBackend:
+    """Abstract codec backend.  Subclasses set ``name`` and ``jittable``."""
+
+    name: str = "abstract"
+    #: True when encode/decode are traceable (usable inside jit / shard_map).
+    jittable: bool = False
+
+    def encode(self, x: jax.Array, codebook: Codebook, *,
+               chunk: int = C.DEFAULT_CHUNK, cap: int = C.DEFAULT_CAP,
+               layout: str = "chunked") -> Any:
+        raise NotImplementedError
+
+    def decode(self, comp: Any) -> jax.Array:
+        raise NotImplementedError
+
+    def ok(self, comp: Any):
+        """Did the compressed form stay within capacity (lossless as-is)?"""
+        raise NotImplementedError
+
+    def wire_bytes(self, comp: Any):
+        """Exact variable-length wire bytes for this tensor (when ok)."""
+        raise NotImplementedError
+
+    def raw_bytes(self, comp: Any) -> float:
+        """Uncompressed bytes of the original tensor (the fallback cost)."""
+        raise NotImplementedError
+
+
+class _InGraphBackend(CodecBackend):
+    """Shared accounting for backends producing ``CompressedTensor`` pytrees."""
+
+    jittable = True
+
+    def ok(self, comp: C.CompressedTensor):
+        return comp.ok
+
+    def wire_bytes(self, comp: C.CompressedTensor):
+        return C.compressed_bytes(comp)
+
+    def raw_bytes(self, comp: C.CompressedTensor) -> float:
+        return C.raw_bytes(comp)
+
+
+class XlaBackend(_InGraphBackend):
+    """Pure-jnp reference codec: broadcast-compare encode, one-hot decode."""
+
+    name = "xla"
+
+    def encode(self, x, codebook, *, chunk=C.DEFAULT_CHUNK, cap=C.DEFAULT_CAP,
+               layout="chunked"):
+        return C.encode(x, codebook, chunk=chunk, cap=cap, layout=layout)
+
+    def decode(self, comp):
+        return C.decode(comp)
+
+
+class PallasBackend(_InGraphBackend):
+    """Pallas dense kernels + XLA escape compaction (interpret mode off-TPU)."""
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool | None = None):
+        # None => auto: compiled on TPU, interpreted elsewhere (kernels/ops.py)
+        self.interpret = interpret
+
+    def encode(self, x, codebook, *, chunk=C.DEFAULT_CHUNK, cap=C.DEFAULT_CAP,
+               layout="chunked"):
+        from repro.kernels import ops as kops
+        return kops.encode(x, codebook, chunk=chunk, cap=cap, layout=layout,
+                           interpret=self.interpret)
+
+    def decode(self, comp):
+        from repro.kernels import ops as kops
+        return kops.decode(comp, interpret=self.interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCompressed:
+    """Host-side compressed tensor: the true variable-length byte payload."""
+
+    payload: bytes
+    shape: tuple
+    dtype: str
+    fmt: str
+    stats: W.WireStats
+
+
+class WireBackend(CodecBackend):
+    """Host numpy wire codec — byte-exact serialization, no capacity limit."""
+
+    name = "wire"
+    jittable = False
+
+    def encode(self, x, codebook, *, chunk=C.DEFAULT_CHUNK, cap=C.DEFAULT_CAP,
+               layout="chunked"):
+        # cap/layout are in-graph concerns: the wire format's escape arrays
+        # are exactly M entries, so capacity never applies.
+        fmt = codebook.fmt
+        bits = np.asarray(C.to_bits(jnp.asarray(x), fmt)).ravel()
+        payload, stats = W.encode(bits, codebook, chunk=chunk)
+        return WireCompressed(payload=payload, shape=tuple(np.shape(x)),
+                              dtype=str(jnp.asarray(x).dtype), fmt=fmt,
+                              stats=stats)
+
+    def decode(self, comp: WireCompressed) -> jax.Array:
+        bits = jnp.asarray(W.decode(comp.payload)).reshape(comp.shape)
+        return C.from_bits(bits, jnp.dtype(comp.dtype))
+
+    def ok(self, comp: WireCompressed) -> bool:
+        return True  # variable-length format: unconditionally lossless
+
+    def wire_bytes(self, comp: WireCompressed) -> float:
+        return float(comp.stats.payload_bytes)
+
+    def raw_bytes(self, comp: WireCompressed) -> float:
+        n = int(np.prod(comp.shape)) if comp.shape else 1
+        return n * FORMATS[comp.fmt]["bits"] / 8.0
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], CodecBackend]] = {}
+_INSTANCES: Dict[str, CodecBackend] = {}
+
+
+def register_backend(name: str, factory: Callable[[], CodecBackend]) -> None:
+    """Register a codec backend under ``name`` (later wins, instances reset)."""
+    _REGISTRY[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def get_backend(name: str) -> CodecBackend:
+    """Resolve a backend name to its (cached) instance."""
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown codec backend {name!r}; available: {available_backends()}")
+    if name not in _INSTANCES:
+        _INSTANCES[name] = _REGISTRY[name]()
+    return _INSTANCES[name]
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_backend("xla", XlaBackend)
+register_backend("pallas", PallasBackend)
+register_backend("wire", WireBackend)

@@ -77,7 +77,11 @@ def theoretical_opt_speedup(p: CodecProfile) -> float:
 @dataclasses.dataclass(frozen=True)
 class ChunkSchedule:
     """An explicit overlapped schedule for the transfer engine: at step t the
-    engine encodes chunk t, transfers chunk t-1 and decodes chunk t-2."""
+    engine encodes chunk t, transfers chunk t-1 and decodes chunk t-2.
+
+    Driven by ``repro.serving.transfer.transfer_cache_chunked`` (the chunked
+    pipelined engine) and modeled analytically by ``pipelined_transfer_time``
+    (what the scheduler charges when ``n_chunks > 1``)."""
 
     n_chunks: int
 

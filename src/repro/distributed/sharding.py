@@ -76,9 +76,15 @@ class ShardingPolicy:
 
     # -- helpers ---------------------------------------------------------------
     def _maybe(self, dim: int, axes):
-        """axes if dim divides their product (and dim is concrete), else None."""
+        """axes if dim divides their product (and dim is concrete), else None.
+
+        Singleton axis tuples are unwrapped to the bare name: P(('data',),) and
+        P('data',) are semantically identical but compare unequal on jax
+        versions that don't normalize PartitionSpec entries."""
         n = _axis_size(self.mesh, axes)
         if n > 1 and dim % n == 0:
+            if isinstance(axes, tuple) and len(axes) == 1:
+                return axes[0]
             return axes
         return None
 

@@ -6,6 +6,12 @@
 XLA (paper's two-stage structure).  On non-TPU backends the kernels run in
 ``interpret=True`` mode (Python semantics of the kernel body), which is how
 this repo validates them on CPU; on TPU they compile to Mosaic.
+
+Both escape layouts of the core codec are supported: ``layout='chunked'``
+(the paper's per-chunk buffers) and ``layout='global'`` (two-level per-tensor
+compaction) — only the XLA compaction stage differs, the kernels are shared.
+The serving path reaches these wrappers through the ``pallas`` entry of the
+:mod:`repro.core.backend` registry, never by importing this module directly.
 """
 
 from __future__ import annotations
@@ -42,6 +48,7 @@ def encode(
     codebook: Codebook,
     chunk: int = core_codec.DEFAULT_CHUNK,
     cap: int = core_codec.DEFAULT_CAP,
+    layout: str = "chunked",
     block_rows: int = splitzip_encode.DEFAULT_BLOCK_ROWS,
     interpret: bool | None = None,
 ) -> core_codec.CompressedTensor:
@@ -64,9 +71,15 @@ def encode(
         interpret=_auto_interpret(interpret),
     )
     e, _ = core_codec.split_fields(bits, fmt)
-    esc_pos, esc_val, esc_count, ok = core_codec.collect_escapes(
-        e, ~(is_esc.reshape(-1).astype(bool)), chunk, cap
-    )
+    member = ~(is_esc.reshape(-1).astype(bool))
+    if layout == "global":
+        if cap == core_codec.DEFAULT_CAP:
+            cap = core_codec.default_global_cap(bits.shape[0])
+        esc_pos, esc_val, esc_count, ok = core_codec.collect_escapes_global(
+            e, member, cap)
+    else:
+        esc_pos, esc_val, esc_count, ok = core_codec.collect_escapes(
+            e, member, chunk, cap)
     return core_codec.CompressedTensor(
         sign_mantissa=a.reshape(-1),
         packed=packed.reshape(-1),
@@ -80,6 +93,7 @@ def encode(
         exponents=tuple(codebook.exponents),
         chunk=chunk,
         cap=cap,
+        layout=layout,
     )
 
 
@@ -107,7 +121,10 @@ def decode(
     spec = FORMATS[ct.fmt]
     mbits, ebits = spec["mbits"], spec["ebits"]
     e = ((bits.astype(jnp.int32) >> mbits) & ((1 << ebits) - 1)).astype(jnp.uint8)
-    e = core_codec.scatter_escapes(e, ct.esc_pos, ct.esc_val, chunk)
+    if ct.layout == "global":
+        e = core_codec.scatter_escapes_global(e, ct.esc_pos, ct.esc_val)
+    else:
+        e = core_codec.scatter_escapes(e, ct.esc_pos, ct.esc_val, chunk)
     bits = core_codec.join_fields(e, ct.sign_mantissa, ct.fmt)
     n = ct.n_elements
     return core_codec.from_bits(bits[:n].reshape(ct.shape), jnp.dtype(ct.dtype))

@@ -5,6 +5,10 @@ codebook on this model's real KV activations, then prefill -> compressed
 transfer -> decode for a batch of synthetic prompts, reporting transfer
 ratio, codec health, and (analytic) transfer-time speedup under a chosen
 link bandwidth.
+
+``--codec-backend`` selects the codec implementation from the registry
+(``xla`` | ``pallas`` | ``wire``); ``--n-chunks`` > 1 switches the transfer
+stage to the chunked pipelined engine and reports per-chunk wire bytes.
 """
 
 from __future__ import annotations
@@ -18,6 +22,7 @@ import numpy as np
 
 from repro.configs.base import ShapeConfig, get_config
 from repro.core import codebook as cbm
+from repro.core.backend import available_backends
 from repro.core.pipeline import CodecProfile
 from repro.models import model as M
 from repro.serving.engine import DisaggregatedEngine
@@ -46,6 +51,11 @@ def main(argv=None):
     ap.add_argument("--link-gbps", type=float, default=100.0,
                     help="simulated PD link (Gbit/s) for the analytic report")
     ap.add_argument("--no-compress", action="store_true")
+    ap.add_argument("--codec-backend", default="xla",
+                    choices=sorted(available_backends()),
+                    help="codec backend registry key (core/backend.py)")
+    ap.add_argument("--n-chunks", type=int, default=1,
+                    help=">1 => chunked pipelined transfer engine")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -62,7 +72,9 @@ def main(argv=None):
     profile = CodecProfile(g_enc=613.3e9, g_dec=2181.8e9, ratio=4 / 3,
                            link_bw=args.link_gbps * 1e9 / 8)
     eng = DisaggregatedEngine(cfg, params, cb,
-                              compress=not args.no_compress, profile=profile)
+                              compress=not args.no_compress,
+                              backend=args.codec_backend,
+                              n_chunks=args.n_chunks, profile=profile)
 
     shape = ShapeConfig("serve", seq_len=args.prompt_len,
                         global_batch=args.batch, kind="prefill")
@@ -78,6 +90,13 @@ def main(argv=None):
     print(f"cache wire bytes     : {eng.stats.wire_bytes:,.0f}")
     print(f"transfer ratio       : {eng.stats.transfer_ratio:.3f}x")
     print(f"codec ok (no overflow): {eng.stats.codec_ok}")
+    print(f"codec backend        : {args.codec_backend}")
+    if eng.stats.chunk_wire_bytes:
+        per = eng.stats.chunk_wire_bytes
+        print(f"pipelined chunks     : {len(per)} shipped "
+              f"(requested {args.n_chunks}; alignment to the codec chunk can "
+              f"produce fewer) — per-chunk wire bytes "
+              f"min={min(per):,.0f} max={max(per):,.0f}")
     rep = eng.transfer_report()
     if rep:
         print(f"analytic transfer    : native {rep.t_native*1e3:.2f} ms -> "

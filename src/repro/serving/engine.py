@@ -10,6 +10,13 @@ Two operating modes:
 * **mesh** (dry-run, TPU): the transfer runs `transfer_cache_cross_pod`
   (shard_map + ppermute over the pod axis); prefill/decode are pjit'd with
   the sharding policy.
+
+The codec implementation is selected via the ``backend`` registry key
+(``xla`` | ``pallas`` | ``wire`` — see :mod:`repro.core.backend`) and the
+transfer granularity via ``n_chunks``: 1 reproduces the additive
+whole-tensor path, >1 runs the chunked pipelined engine
+(``transfer_cache_chunked``), which records per-chunk wire bytes in
+``EngineStats.chunk_wire_bytes``.  Both paths are bit-exact by construction.
 """
 
 from __future__ import annotations
@@ -38,6 +45,9 @@ class EngineStats:
     prefill_calls: int = 0
     decode_tokens: int = 0
     codec_ok: bool = True
+    # per-chunk wire bytes, one entry per pipeline chunk per transfer call
+    # (chunked mode only; the whole-tensor path leaves this empty)
+    chunk_wire_bytes: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def transfer_ratio(self) -> float:
@@ -49,11 +59,13 @@ class DisaggregatedEngine:
 
     def __init__(self, cfg: ArchConfig, params, codebook: Codebook,
                  *, compress: bool = True, chunk: int = 1024, cap: int = 64,
+                 backend: str = "xla", n_chunks: int = 1,
                  profile: Optional[CodecProfile] = None):
         self.cfg = cfg
         self.params = params
         self.tc = T.TransferConfig(codebook=codebook, chunk=chunk, cap=cap,
-                                   enabled=compress)
+                                   enabled=compress, backend=backend,
+                                   n_chunks=n_chunks)
         self.profile = profile
         self.stats = EngineStats()
 
@@ -66,29 +78,47 @@ class DisaggregatedEngine:
     def transfer(self, state: DecodeState) -> DecodeState:
         """Compress -> ship -> decompress.  Bit-exact by construction.
 
-        Escape-capacity overflow (ct.ok == False) triggers the per-tensor raw
-        fallback: that tensor ships uncompressed (compressed_wire_bytes already
-        charges raw bytes for it), so losslessness is unconditional even on
-        adversarial activation distributions."""
+        Escape-capacity overflow (``ok == False``) triggers the raw fallback —
+        per tensor on the whole-tensor path, per chunk on the pipelined path —
+        so losslessness is unconditional even on adversarial activation
+        distributions, and the accounting charges raw bytes for exactly the
+        payload that actually shipped raw."""
         raw = T.raw_wire_bytes(state.cache)
         self.stats.raw_cache_bytes += raw
         if not self.tc.enabled or not state.cache:
             self.stats.wire_bytes += raw
             return state
+        if self.tc.n_chunks > 1:
+            return self._transfer_chunked(state)
+        be = self.tc.get_backend()
         comp, rawleaves = T.compress_cache(state.cache, self.tc)
-        self.stats.wire_bytes += float(T.compressed_wire_bytes(comp, rawleaves))
-        self.stats.codec_ok &= all(bool(ct.ok) for ct in comp.values())
+        self.stats.wire_bytes += float(
+            T.compressed_wire_bytes(comp, rawleaves, backend=self.tc.backend))
+        self.stats.codec_ok &= all(bool(be.ok(ct)) for ct in comp.values())
         # raw fallback for overflowed tensors (detected via the ok flag; in
         # the mesh path this is the off-graph re-fetch — see DESIGN.md §2)
-        overflowed = {k for k, ct in comp.items() if not bool(ct.ok)}
+        overflowed = {k for k, ct in comp.items() if not bool(be.ok(ct))}
         if overflowed:
             flat = jax.tree_util.tree_flatten_with_path(state.cache)[0]
-            originals = {"/".join(str(getattr(k, "key", k)) for k in p): leaf
-                         for p, leaf in flat}
+            originals = {T.leaf_key(p): leaf for p, leaf in flat}
             comp = {k: v for k, v in comp.items() if k not in overflowed}
-            rawleaves = dict(rawleaves,
-                             **{k: originals[k] for k in overflowed})
-        cache = T.decompress_cache(comp, rawleaves, state.cache)
+            rawleaves = dict(rawleaves)
+            for k in overflowed:
+                # an overflowed fp32 hi-half means the whole fp32 leaf ships
+                # raw: drop its lo-half entry and restore the original leaf
+                base = k[:-3] if k.endswith("#hi") else k
+                rawleaves.pop(base + "#lo", None)
+                rawleaves[base] = originals[base]
+        cache = T.decompress_cache(comp, rawleaves, state.cache,
+                                   backend=self.tc.backend)
+        return DecodeState(cache=cache, cache_len=state.cache_len)
+
+    def _transfer_chunked(self, state: DecodeState) -> DecodeState:
+        """Pipelined transfer: per-chunk encode/ship/decode via ChunkSchedule."""
+        cache, cstats = T.transfer_cache_chunked(state.cache, self.tc)
+        self.stats.wire_bytes += cstats.wire_bytes
+        self.stats.chunk_wire_bytes.extend(cstats.chunk_wire_bytes)
+        self.stats.codec_ok &= cstats.all_ok
         return DecodeState(cache=cache, cache_len=state.cache_len)
 
     def decode(self, first_token: jax.Array, state: DecodeState,
@@ -110,4 +140,5 @@ class DisaggregatedEngine:
         if self.profile is None:
             return None
         return T.transfer_report(self.stats.raw_cache_bytes,
-                                 self.stats.wire_bytes, self.profile)
+                                 self.stats.wire_bytes, self.profile,
+                                 n_chunks=self.tc.n_chunks)

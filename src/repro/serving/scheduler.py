@@ -7,6 +7,11 @@ caches to the transfer engine, admits transferred requests into decode slots,
 and retires finished requests.  Timing is simulated with the analytic codec /
 link profile so the same scheduler drives both the real CPU execution (tiny
 configs, tests) and the paper-scale what-if sweeps (Fig. 2 analogue).
+
+The transfer-time model follows the engine's granularity setting:
+``n_chunks == 1`` uses the additive whole-tensor accounting (paper Fig. 4),
+``n_chunks > 1`` uses the chunked steady-state pipeline (paper Appendix A),
+matching ``transfer_cache_chunked``'s ChunkSchedule overlap.
 """
 
 from __future__ import annotations
@@ -16,7 +21,8 @@ import heapq
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
-from repro.core.pipeline import CodecProfile, additive_transfer_time, native_transfer_time
+from repro.core.pipeline import (CodecProfile, additive_transfer_time,
+                                 native_transfer_time, pipelined_transfer_time)
 
 
 @dataclasses.dataclass
@@ -42,6 +48,10 @@ class SchedulerConfig:
     kv_bytes_per_token: int = 0              # set from the arch config
     profile: Optional[CodecProfile] = None   # codec/link profile
     compress: bool = True
+    # transfer-granularity model: 1 => additive whole-tensor accounting
+    # (paper Fig. 4); >1 => chunked pipeline, encode/transfer/decode overlap
+    # (paper Appendix A; matches transfer_cache_chunked's ChunkSchedule)
+    n_chunks: int = 1
 
 
 class DisaggregatedScheduler:
@@ -66,6 +76,8 @@ class DisaggregatedScheduler:
         if p is None or bytes_ == 0:
             return 0.0
         if self.cfg.compress:
+            if self.cfg.n_chunks > 1:
+                return pipelined_transfer_time(bytes_, p, self.cfg.n_chunks)
             return additive_transfer_time(bytes_, p)
         return native_transfer_time(bytes_, p)
 

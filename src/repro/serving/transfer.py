@@ -11,6 +11,15 @@ Losslessness is unconditional: each tensor's ``ok`` flag (escape-capacity
 overflow) selects compressed vs raw payload per tensor, so adversarial
 activation distributions degrade to raw-speed transfer, never to corruption.
 
+Codec selection is pluggable: every encode/decode in this module goes through
+the :mod:`repro.core.backend` registry (``TransferConfig.backend`` — ``xla``,
+``pallas``, or ``wire``), never through a codec module directly.  Transfer
+granularity is pluggable too: ``TransferConfig.n_chunks > 1`` switches from
+whole-tensor encode→ship→decode to the chunked pipelined engine
+(``transfer_cache_chunked``), which drives ``ChunkSchedule`` so encode of
+chunk *t* overlaps transfer of *t−1* and decode of *t−2*, with a per-chunk
+raw fallback preserving unconditional losslessness.
+
 Byte accounting for the roofline reads the ppermute operand sizes straight
 from the lowered HLO (analysis/roofline.py); the analytic model here
 (`transfer_report`) mirrors the paper's Fig. 3/4 accounting.
@@ -20,17 +29,20 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import codec as C
+from repro.core.backend import CodecBackend, get_backend
 from repro.core.codebook import Codebook
-from repro.core.pipeline import CodecProfile, additive_transfer_time, native_transfer_time
+from repro.core.pipeline import (ChunkSchedule, CodecProfile,
+                                 additive_transfer_time, native_transfer_time,
+                                 pipelined_transfer_time)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +54,32 @@ class TransferConfig:
     compress_fp32: bool = False   # beyond-paper fp32-state codec toggle
     layout: str = "chunked"       # 'chunked' (paper) | 'global' (beyond-paper)
     global_budget: float = 0.01   # escape-capacity budget for layout='global'
+    backend: str = "xla"          # codec backend registry key (core/backend.py)
+    n_chunks: int = 1             # >1 => chunked pipelined transfer engine
+
+    def get_backend(self) -> CodecBackend:
+        return get_backend(self.backend)
+
+
+def leaf_key(path) -> str:
+    """Canonical pytree-path -> string key.  Compression, wire accounting,
+    segmentation, and reassembly all index by this; it must stay one
+    definition or decompression silently misroutes leaves."""
+    return "/".join(str(getattr(k, "key", k)) for k in path)
+
+
+def _backend_for(comp_obj, be: CodecBackend) -> CodecBackend:
+    """Resolve the backend that can actually decode ``comp_obj``.
+
+    Guards the split compress/decompress API: wire payloads decode only with
+    the wire backend, in-graph CompressedTensors only with a jittable one
+    (xla and pallas share the stream layout, so either decodes either).  A
+    mismatched ``backend=`` argument is corrected instead of crashing with
+    an opaque AttributeError."""
+    from repro.core.backend import WireCompressed
+    if isinstance(comp_obj, WireCompressed):
+        return be if be.name == "wire" else get_backend("wire")
+    return be if be.jittable else get_backend("xla")
 
 
 # ---------------------------------------------------------------------------
@@ -59,40 +97,47 @@ def compress_cache(cache: Dict, tc: TransferConfig) -> Tuple[Dict, Dict]:
     mantissa half ships raw — lossless fp32 at ratio 32/(16/rho+16) ≈ 1.14x.
     This is what makes SplitZip useful for fp32 recurrent state transfer
     (SSM/RG-LRU caches), where the paper's bf16-only codec gives zero."""
+    be = tc.get_backend()
     comp, raw = {}, {}
     flat = jax.tree_util.tree_flatten_with_path(cache)[0]
     for path, leaf in flat:
-        key = "/".join(str(getattr(k, "key", k)) for k in path)
+        key = leaf_key(path)
         def _cap(n):
             cap = tc.cap
             if tc.layout == "global" and cap == C.DEFAULT_CAP:
                 cap = C.default_global_cap(n, tc.global_budget)
             return cap
         if leaf.dtype == jnp.bfloat16 and tc.enabled:
-            comp[key] = C.encode(leaf, tc.codebook, chunk=tc.chunk,
-                                 cap=_cap(leaf.size), layout=tc.layout)
+            comp[key] = be.encode(leaf, tc.codebook, chunk=tc.chunk,
+                                  cap=_cap(leaf.size), layout=tc.layout)
         elif leaf.dtype == jnp.float32 and tc.enabled and tc.compress_fp32:
             u = jax.lax.bitcast_convert_type(leaf, jnp.uint32)
             hi = (u >> 16).astype(jnp.uint16)   # bf16-layout bits
             lo = (u & 0xFFFF).astype(jnp.uint16)
-            comp[key + "#hi"] = C.encode(hi, tc.codebook, chunk=tc.chunk,
-                                         cap=_cap(hi.size), layout=tc.layout)
+            comp[key + "#hi"] = be.encode(hi, tc.codebook, chunk=tc.chunk,
+                                          cap=_cap(hi.size), layout=tc.layout)
             raw[key + "#lo"] = lo
         else:
             raw[key] = leaf
     return comp, raw
 
 
-def decompress_cache(comp: Dict, raw: Dict, structure: Dict) -> Dict:
-    """Inverse of compress_cache against the original pytree structure."""
+def decompress_cache(comp: Dict, raw: Dict, structure: Dict,
+                     backend: str = "xla") -> Dict:
+    """Inverse of compress_cache against the original pytree structure.
+    Per-object backend dispatch (``_backend_for``) tolerates a ``backend=``
+    argument that doesn't match what actually produced ``comp``."""
+    be = get_backend(backend)
     flat, treedef = jax.tree_util.tree_flatten_with_path(structure)
     leaves = []
     for path, leaf in flat:
-        key = "/".join(str(getattr(k, "key", k)) for k in path)
+        key = leaf_key(path)
         if key in comp:
-            leaves.append(C.decode(comp[key]).reshape(leaf.shape))
+            ct = comp[key]
+            leaves.append(_backend_for(ct, be).decode(ct).reshape(leaf.shape))
         elif key + "#hi" in comp:  # fp32 hi/lo split
-            hi = C.decode(comp[key + "#hi"]).reshape(leaf.shape)
+            ct = comp[key + "#hi"]
+            hi = _backend_for(ct, be).decode(ct).reshape(leaf.shape)
             lo = raw[key + "#lo"]
             u = (hi.astype(jnp.uint32) << 16) | lo.astype(jnp.uint32)
             leaves.append(jax.lax.bitcast_convert_type(u, jnp.float32))
@@ -101,13 +146,18 @@ def decompress_cache(comp: Dict, raw: Dict, structure: Dict) -> Dict:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def compressed_wire_bytes(comp: Dict, raw: Dict) -> jax.Array:
+def compressed_wire_bytes(comp: Dict, raw: Dict,
+                          backend: str = "xla") -> jax.Array:
+    """Total wire bytes with the per-tensor raw fallback applied: a tensor
+    whose escape capacity overflowed (``ok == False``) is charged raw bytes,
+    because that is what the engine actually ships for it."""
+    be = get_backend(backend)
     total = jnp.zeros((), jnp.float32)
     for ct in comp.values():
-        # per-tensor fallback: raw bytes if the escape buffer overflowed
-        total = total + jnp.where(C.compressed_bytes(ct) * 0 + ct.ok,
-                                  C.compressed_bytes(ct),
-                                  jnp.float32(C.raw_bytes(ct)))
+        b = _backend_for(ct, be)
+        total = total + jnp.where(b.ok(ct),
+                                  jnp.asarray(b.wire_bytes(ct), jnp.float32),
+                                  jnp.float32(b.raw_bytes(ct)))
     for leaf in raw.values():
         total = total + leaf.size * leaf.dtype.itemsize
     return total
@@ -158,6 +208,10 @@ def transfer_cache_cross_pod(
     """
     if "pod" not in mesh.shape:
         raise ValueError("transfer_cache_cross_pod needs a 'pod' mesh axis")
+    if not get_backend(tc.backend).jittable:
+        raise ValueError(
+            f"backend {tc.backend!r} is host-side and cannot run inside "
+            "shard_map; use a jittable backend ('xla', 'pallas')")
     n_pod = mesh.shape["pod"]
 
     def leaf_spec(x):
@@ -180,7 +234,7 @@ def transfer_cache_cross_pod(
             lambda x: _permute_leaf(x, "pod", src_pod, dst_pod), comp)
         moved_raw = jax.tree.map(
             lambda x: _permute_leaf(x, "pod", src_pod, dst_pod), raw)
-        out = decompress_cache(moved_comp, moved_raw, local)
+        out = decompress_cache(moved_comp, moved_raw, local, backend=tc.backend)
         return tuple(x[None] for x in jax.tree.leaves(out))
 
     leaves = jax.tree.leaves(cache)
@@ -210,6 +264,152 @@ def transfer_cache_cross_pod(
 
 
 # ---------------------------------------------------------------------------
+# chunked pipelined transfer engine (paper Appendix A made concrete)
+#
+# The whole-tensor path above is additive: encode the entire cache, ship it,
+# decode it.  The paper's headline claim is that the codec keeps up with KV
+# production, so encode/transfer/decode can be OVERLAPPED: split the cache
+# into n_chunks contiguous byte-range segments and drive them through
+# ChunkSchedule — at step t the engine encodes chunk t, transfers chunk t-1,
+# decodes chunk t-2.  Locally the stages execute in schedule order (the
+# overlap is a wall-clock property of the deployment link, modeled by
+# pipelined_transfer_time); what this engine makes real is the per-chunk
+# data path: segmentation, per-chunk encode/ship/decode, per-chunk ok/raw
+# fallback, per-chunk wire accounting, and bit-exact reassembly.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ChunkedTransferStats:
+    """Per-chunk accounting emitted by ``transfer_cache_chunked``."""
+
+    chunk_wire_bytes: List[float]   # wire bytes actually shipped per chunk
+    chunk_ok: List[bool]            # escape capacity held for this chunk?
+    raw_passthrough_bytes: float    # non-bf16 leaves shipped outside the pipe
+    n_elements: int                 # bf16 elements routed through the pipe
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(self.chunk_wire_bytes) + self.raw_passthrough_bytes
+
+    @property
+    def all_ok(self) -> bool:
+        return all(self.chunk_ok)
+
+
+def split_cache_segments(cache: Dict, n_chunks: int, align: int
+                         ) -> Tuple[List[jax.Array], List[Tuple[str, tuple]], Dict]:
+    """Flatten every bf16 leaf into one u16 bit stream and cut it into at
+    most ``n_chunks`` contiguous segments, each aligned to ``align`` elements
+    (the codec chunk) except the last.  Returns (segments, leaf metadata for
+    reassembly, raw passthrough leaves)."""
+    bits_parts, metas, raw = [], [], {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        key = leaf_key(path)
+        if leaf.dtype == jnp.bfloat16:
+            bits_parts.append(
+                jax.lax.bitcast_convert_type(leaf, jnp.uint16).reshape(-1))
+            metas.append((key, tuple(leaf.shape)))
+        else:
+            raw[key] = leaf
+    if not bits_parts:
+        return [], metas, raw
+    stream = jnp.concatenate(bits_parts) if len(bits_parts) > 1 else bits_parts[0]
+    n = stream.shape[0]
+    per = -(-n // max(1, n_chunks))          # ceil split
+    per = max(align, -(-per // align) * align)  # align up to the codec chunk
+    segments = [stream[i:i + per] for i in range(0, n, per)]
+    return segments, metas, raw
+
+
+def _reassemble_cache(bits_out: jax.Array, metas, raw: Dict,
+                      structure: Dict) -> Dict:
+    """Inverse of split_cache_segments: slice the decoded bit stream back
+    into leaves and restore the original pytree structure."""
+    decoded, off = {}, 0
+    for key, shape in metas:
+        n = int(np.prod(shape)) if shape else 1
+        decoded[key] = jax.lax.bitcast_convert_type(
+            bits_out[off:off + n].reshape(shape), jnp.bfloat16)
+        off += n
+    flat, treedef = jax.tree_util.tree_flatten_with_path(structure)
+    leaves = []
+    for path, leaf in flat:
+        key = leaf_key(path)
+        leaves.append(decoded[key] if key in decoded else raw[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def transfer_cache_chunked(cache: Dict, tc: TransferConfig
+                           ) -> Tuple[Dict, ChunkedTransferStats]:
+    """Chunked pipelined compress → ship → decompress of a cache pytree.
+
+    Drives ``ChunkSchedule(n).stages()``: each schedule step encodes one
+    chunk, "transfers" the previous one (local mode: accounting + payload
+    hand-off; the mesh path ships these same per-chunk streams), and decodes
+    the one before that.  A chunk whose escape capacity overflows ships its
+    raw bits instead (per-chunk fallback), so the reassembled cache is
+    bit-identical to the input unconditionally.
+    """
+    be = tc.get_backend()
+    segments, metas, raw = split_cache_segments(cache, tc.n_chunks, tc.chunk)
+    raw_pass = float(sum(x.size * x.dtype.itemsize for x in raw.values()))
+    if not segments or not tc.enabled:
+        # nothing to compress (or baseline mode): every chunk ships raw bits
+        stats = ChunkedTransferStats(
+            chunk_wire_bytes=[float(s.shape[0] * 2) for s in segments],
+            chunk_ok=[True] * len(segments),
+            raw_passthrough_bytes=raw_pass,
+            n_elements=int(sum(s.shape[0] for s in segments)))
+        return cache, stats
+
+    def _cap(n):
+        cap = tc.cap
+        if tc.layout == "global" and cap == C.DEFAULT_CAP:
+            cap = C.default_global_cap(n, tc.global_budget)
+        return cap
+
+    n_seg = len(segments)
+    encoded: Dict[int, object] = {}
+    in_flight: Dict[int, object] = {}
+    decoded_bits: Dict[int, jax.Array] = {}
+    wire_per_chunk: List[float] = [0.0] * n_seg
+    ok_per_chunk: List[bool] = [True] * n_seg
+
+    for enc_i, xfer_i, dec_i in ChunkSchedule(n_seg).stages():
+        if 0 <= enc_i < n_seg:
+            encoded[enc_i] = be.encode(
+                segments[enc_i], tc.codebook, chunk=tc.chunk,
+                cap=_cap(segments[enc_i].shape[0]), layout=tc.layout)
+        if 0 <= xfer_i < n_seg:
+            ct = encoded.pop(xfer_i)
+            okx = bool(be.ok(ct))
+            ok_per_chunk[xfer_i] = okx
+            wire_per_chunk[xfer_i] = (
+                float(be.wire_bytes(ct)) if okx
+                else float(segments[xfer_i].shape[0] * 2))  # raw u16 fallback
+            # the wire hop: compressed streams (or raw bits) leave the
+            # prefill side here; in local mode this is a hand-off
+            in_flight[xfer_i] = ct if okx else None
+        if 0 <= dec_i < n_seg:
+            ct = in_flight.pop(dec_i)
+            if ct is None:  # raw fallback: the original bits were shipped
+                decoded_bits[dec_i] = segments[dec_i]
+            else:
+                decoded_bits[dec_i] = C.to_bits(be.decode(ct), tc.codebook.fmt
+                                                ).reshape(-1)
+
+    bits_out = jnp.concatenate([decoded_bits[i] for i in range(n_seg)]) \
+        if n_seg > 1 else decoded_bits[0]
+    out = _reassemble_cache(bits_out, metas, raw, cache)
+    stats = ChunkedTransferStats(
+        chunk_wire_bytes=wire_per_chunk, chunk_ok=ok_per_chunk,
+        raw_passthrough_bytes=raw_pass,
+        n_elements=int(sum(s.shape[0] for s in segments)))
+    return out, stats
+
+
+# ---------------------------------------------------------------------------
 # analytic transfer report (paper Fig. 3 / Fig. 4 accounting)
 # ---------------------------------------------------------------------------
 
@@ -233,15 +433,23 @@ class TransferReport:
 
 
 def transfer_report(raw_bytes: float, wire_bytes: float,
-                    profile: CodecProfile) -> TransferReport:
-    """Additive accounting: encode + compressed transfer + decode (Fig. 4)."""
+                    profile: CodecProfile, n_chunks: int = 1) -> TransferReport:
+    """Analytic accounting from MEASURED wire bytes: additive
+    encode + compressed transfer + decode (Fig. 4) when ``n_chunks == 1``,
+    chunked steady-state pipeline (Appendix A: fill + (n-1)·bottleneck +
+    drain) when ``n_chunks > 1`` — matching what the engine actually ran."""
     t_enc = raw_bytes / profile.g_enc
     t_dec = raw_bytes / profile.g_dec
     t_xfer = wire_bytes / profile.link_bw
+    if n_chunks > 1:
+        per = [t / n_chunks for t in (t_enc, t_xfer, t_dec)]
+        t_total = sum(per) + (n_chunks - 1) * max(per) + profile.fixed_overhead_s
+    else:
+        t_total = t_enc + t_xfer + t_dec + profile.fixed_overhead_s
     return TransferReport(
         raw_bytes=raw_bytes,
         wire_bytes=wire_bytes,
         t_native=raw_bytes / profile.link_bw + profile.fixed_overhead_s,
-        t_splitzip=t_enc + t_xfer + t_dec + profile.fixed_overhead_s,
+        t_splitzip=t_total,
         t_encode=t_enc, t_transfer=t_xfer, t_decode=t_dec,
     )

@@ -26,8 +26,9 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core import codec as C
 from repro.core.codebook import Codebook

@@ -2,8 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import codebook as cbm
 from repro.core import wire
@@ -52,13 +50,14 @@ def test_wire_matches_ingraph_byte_accounting():
     assert ingraph == pytest.approx(len(payload) - header)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.binary(min_size=2, max_size=4096))
-def test_property_wire_roundtrip_arbitrary_bytes(data):
-    n = len(data) // 2
-    if n == 0:
-        return
-    bits = np.frombuffer(data[: 2 * n], dtype=np.uint16)
+@pytest.mark.parametrize("seed", range(20))
+def test_wire_roundtrip_arbitrary_bytes(seed):
+    """Seeded stand-in for the former hypothesis property test: ANY byte
+    buffer (uniform random sizes and contents, worst-case escape rates under
+    a deliberately tiny codebook) must roundtrip byte-exactly."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 2048))
+    bits = rng.integers(0, 1 << 16, n).astype(np.uint16)
     cb = cbm.Codebook(fmt="bf16", exponents=tuple(range(16)))
     payload, _ = wire.encode(bits, cb)
     assert np.array_equal(wire.decode(payload), bits)
