@@ -7,22 +7,36 @@ variable-length (Huffman) and general-purpose (deflate/cascaded) codecs on
 the encode+decode path, and the sentinel variant loses decode throughput).
 
 Codecs measured:
-  splitzip-wire   : numpy wire codec (production host path)
-  splitzip-xla    : jitted in-graph codec (the XLA/TPU path, run on CPU)
-  splitzip-pallas : Pallas kernels in interpret mode (correctness path;
-                    interpret-mode timing is reported but flagged)
-  top15-sentinel  : ZipServ-class fixed coding (ablation twin of Table 6)
-  huffman-exp     : DFloat11/ZipNN-class exponent Huffman
-  deflate         : zlib level 1 (nvCOMP-LZ4-class)
-  cascaded        : byte-plane + delta + entropy stage (nvCOMP-Cascaded-class)
+  splitzip-wire           : numpy wire codec (production host path)
+  splitzip-xla            : jitted in-graph codec (the XLA/TPU path, on CPU)
+  splitzip-pallas         : fused single-pass Pallas kernels (interpret mode)
+  splitzip-pallas-2stage  : pre-fusion dense kernel + XLA escape passes (A/B)
+  top15-sentinel          : ZipServ-class fixed coding (Table 6 ablation twin)
+  huffman-exp             : DFloat11/ZipNN-class exponent Huffman
+  deflate                 : zlib level 1 (nvCOMP-LZ4-class)
+  cascaded                : byte-plane + delta + entropy (nvCOMP-Cascaded)
 
-The three SplitZip rows are driven through the codec-backend registry
+The SplitZip rows are driven through the codec-backend registry
 (``TransferConfig.backend`` -> :mod:`repro.core.backend`), the same dispatch
 the serving engine uses — a backend added to the registry shows up here with
 zero benchmark changes.
+
+Beyond timing, the fused-vs-two-stage pair is a STRUCTURAL regression gate:
+the lowered programs are inspected and the benchmark fails loudly if the
+fused path stops being a single ``pallas_call`` per direction or grows an
+XLA scatter tail (the launch-count / HBM-traffic property the fusion
+exists for — interpret-mode wall-clock on CPU does not measure it).
+
+A ``BENCH_codec.json`` snapshot (ratios, GB/s, launch structure) is written
+next to this file so the codec-path perf trajectory is tracked PR over PR.
+Set ``SPLITZIP_BENCH_SMOKE=1`` for the CI smoke mode: tiny synthetic
+workload, SplitZip rows + structural assertions only.
 """
 
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +45,7 @@ import numpy as np
 from benchmarks.common import (CodecResult, bench_config, cascaded_roundtrip,
                                deflate_roundtrip, generate_kv_bits, gbps,
                                huffman_exponent_roundtrip, pooled_bits, time_fn)
+from repro.core import backend as B
 from repro.core import codebook as cbm
 from repro.core import codec as C
 from repro.serving.transfer import TransferConfig
@@ -38,9 +53,21 @@ from repro.serving.transfer import TransferConfig
 SPLITZIP_BACKENDS = ("wire", "xla", "pallas")
 
 WORKLOAD_ELEMS = 1 << 22  # 8 MiB of bf16 — CPU-scale stand-in for the 256MB
+SMOKE = bool(int(os.environ.get("SPLITZIP_BENCH_SMOKE", "0")))
+SMOKE_ELEMS = 1 << 16
+
+SNAPSHOT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_codec.json")
 
 
 def _workload() -> np.ndarray:
+    if SMOKE:
+        # synthetic bf16-ish bits, no model prefill: exponents concentrated
+        # on a top-16 band like real KV (keeps the smoke run seconds-scale)
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal(SMOKE_ELEMS) * np.exp(rng.standard_normal(
+            SMOKE_ELEMS))
+        return np.asarray(jax.lax.bitcast_convert_type(
+            jnp.asarray(x.astype(np.float32), dtype=jnp.bfloat16), jnp.uint16))
     cfg = bench_config("qwen3-32b")
     kv = generate_kv_bits(cfg, seq=512, batch=4)
     bits = pooled_bits(kv)
@@ -48,69 +75,167 @@ def _workload() -> np.ndarray:
     return np.tile(bits, reps)[:WORKLOAD_ELEMS]
 
 
+def _count_primitives(fn, *args) -> dict:
+    """jaxpr-level structure of a codec call: pallas_call launches and
+    full-stream scatter ops (the two-stage tail the fusion removes)."""
+    names = []
+
+    def walk(j):
+        for eqn in j.eqns:
+            names.append(eqn.primitive.name)
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    walk(sub.jaxpr)
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return {
+        "pallas_calls": names.count("pallas_call"),
+        "scatter_ops": sum(1 for p in names if p.startswith("scatter")),
+        "total_primitives": len(names),
+    }
+
+
+def _hlo_scatter_count(fn, *args) -> int:
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return txt.count(" scatter(") + txt.count(" scatter.")
+
+
+def _launch_structure(x, cb) -> dict:
+    """Assert + report the fused path's single-launch structure vs two-stage."""
+    be_f = B.PallasBackend()
+    be_t = B.PallasBackend(fused=False)
+    ct = be_f.encode(x, cb)
+    out = {}
+    for tag, be in (("fused", be_f), ("2stage", be_t)):
+        enc = _count_primitives(lambda v, _be=be: _be.encode(v, cb), x)
+        dec = _count_primitives(lambda c, _be=be: _be.decode(c), ct)
+        dec["hlo_scatters"] = _hlo_scatter_count(
+            lambda c, _be=be: _be.decode(c), ct)
+        out[tag] = {"encode": enc, "decode": dec}
+    # the acceptance assertions: one launch per direction, no scatter tail
+    assert out["fused"]["encode"]["pallas_calls"] == 1, out
+    assert out["fused"]["decode"]["pallas_calls"] == 1, out
+    assert out["fused"]["encode"]["scatter_ops"] == 0, out
+    assert out["fused"]["decode"]["scatter_ops"] == 0, out
+    assert out["fused"]["decode"]["hlo_scatters"] == 0, out
+    # ...and the contrast that makes the A/B meaningful
+    assert out["2stage"]["decode"]["scatter_ops"] >= 1, out
+    assert out["2stage"]["encode"]["scatter_ops"] >= 1, out
+    return out
+
+
+def _measure_backend(name: str, be, x, cb, bits, nbytes, repeats) -> CodecResult:
+    if be.jittable:
+        enc_f = jax.jit(lambda v, _be=be: _be.encode(v, cb))
+        dec_f = jax.jit(lambda c, _be=be: _be.decode(c))
+    else:
+        enc_f = lambda v, _be=be: _be.encode(v, cb)
+        dec_f = lambda c, _be=be: _be.decode(c)
+    ct = enc_f(x)
+    y = dec_f(ct)
+    assert bool(jnp.all(jax.lax.bitcast_convert_type(
+        jnp.asarray(y).reshape(-1), jnp.uint16) == jnp.asarray(bits)))
+    ratio = be.raw_bytes(ct) / float(be.wire_bytes(ct))
+    t_enc, _ = time_fn(lambda: enc_f(x), repeats=repeats)
+    t_dec, _ = time_fn(lambda: dec_f(ct), repeats=repeats)
+    return CodecResult(name, ratio, gbps(nbytes, t_enc), gbps(nbytes, t_dec))
+
+
 def run(emit) -> None:
     bits = _workload()
     nbytes = bits.nbytes
     cb = cbm.calibrate([bits], k=16)
+    repeats = 2 if SMOKE else 5
     results = []
 
     # --- splitzip via the codec-backend registry ---------------------------
     x = jax.lax.bitcast_convert_type(jnp.asarray(bits), jnp.bfloat16)
     for bname in SPLITZIP_BACKENDS:
         be = TransferConfig(codebook=cb, backend=bname).get_backend()
-        if be.jittable:
-            enc_f = jax.jit(lambda v, _be=be: _be.encode(v, cb))
-            dec_f = jax.jit(lambda c, _be=be: _be.decode(c))
-        else:
-            enc_f = lambda v, _be=be: _be.encode(v, cb)
-            dec_f = lambda c, _be=be: _be.decode(c)
-        ct = enc_f(x)
-        y = dec_f(ct)
-        assert bool(jnp.all(jax.lax.bitcast_convert_type(
-            jnp.asarray(y).reshape(-1), jnp.uint16) == jnp.asarray(bits)))
-        ratio = be.raw_bytes(ct) / float(be.wire_bytes(ct))
-        t_enc, _ = time_fn(lambda: enc_f(x), repeats=5)
-        t_dec, _ = time_fn(lambda: dec_f(ct), repeats=5)
-        results.append(CodecResult(f"splitzip-{bname}", ratio,
+        results.append(_measure_backend(
+            f"splitzip-{bname}", be, x, cb, bits, nbytes, repeats))
+    # the A/B twin: pre-fusion two-stage structure, same stream layout
+    results.append(_measure_backend(
+        "splitzip-pallas-2stage", B.PallasBackend(fused=False), x, cb, bits,
+        nbytes, repeats))
+
+    # --- fused launch structure (the property the fusion exists for) --------
+    structure = _launch_structure(x, cb)
+    emit("table2", "launch-structure", dict(
+        fused_enc_launches=structure["fused"]["encode"]["pallas_calls"],
+        fused_dec_launches=structure["fused"]["decode"]["pallas_calls"],
+        fused_dec_scatters=structure["fused"]["decode"]["scatter_ops"],
+        twostage_dec_scatters=structure["2stage"]["decode"]["scatter_ops"],
+        fused_enc_primitives=structure["fused"]["encode"]["total_primitives"],
+        twostage_enc_primitives=structure["2stage"]["encode"][
+            "total_primitives"]))
+
+    if not SMOKE:
+        # --- top-15 + sentinel (ZipServ-class) ------------------------------
+        enc_s = jax.jit(lambda v: C.encode_sentinel(v, cb))
+        st = enc_s(x)
+        dec_s = jax.jit(C.decode_sentinel)
+        ys = dec_s(st)
+        assert bool(jnp.all(jax.lax.bitcast_convert_type(ys, jnp.uint16)
+                            == jnp.asarray(bits)))
+        ratio_s = nbytes / float(C.sentinel_bytes(st))
+        t_enc, _ = time_fn(lambda: enc_s(x), repeats=5)
+        t_dec, _ = time_fn(lambda: dec_s(st), repeats=5)
+        results.append(CodecResult("top15-sentinel", ratio_s,
                                    gbps(nbytes, t_enc), gbps(nbytes, t_dec)))
 
-    # --- top-15 + sentinel (ZipServ-class) ----------------------------------
-    enc_s = jax.jit(lambda v: C.encode_sentinel(v, cb))
-    st = enc_s(x)
-    dec_s = jax.jit(C.decode_sentinel)
-    ys = dec_s(st)
-    assert bool(jnp.all(jax.lax.bitcast_convert_type(ys, jnp.uint16)
-                        == jnp.asarray(bits)))
-    ratio_s = nbytes / float(C.sentinel_bytes(st))
-    t_enc, _ = time_fn(lambda: enc_s(x), repeats=5)
-    t_dec, _ = time_fn(lambda: dec_s(st), repeats=5)
-    results.append(CodecResult("top15-sentinel", ratio_s,
-                               gbps(nbytes, t_enc), gbps(nbytes, t_dec)))
+        # --- huffman exponents (DFloat11-class) -----------------------------
+        enc_h, dec_h, ratio_h = huffman_exponent_roundtrip(bits)
+        sub_bytes = min(bits.size, 1 << 18) * 2  # the timed window
+        t_enc, _ = time_fn(enc_h, repeats=3, warmup=1)
+        t_dec, _ = time_fn(dec_h, repeats=3, warmup=1)
+        results.append(CodecResult("huffman-exp", ratio_h,
+                                   gbps(sub_bytes, t_enc), gbps(sub_bytes, t_dec)))
 
-    # --- huffman exponents (DFloat11-class) ---------------------------------
-    enc_h, dec_h, ratio_h = huffman_exponent_roundtrip(bits)
-    sub_bytes = min(bits.size, 1 << 18) * 2  # the timed window
-    t_enc, _ = time_fn(enc_h, repeats=3, warmup=1)
-    t_dec, _ = time_fn(dec_h, repeats=3, warmup=1)
-    results.append(CodecResult("huffman-exp", ratio_h,
-                               gbps(sub_bytes, t_enc), gbps(sub_bytes, t_dec)))
+        # --- deflate / cascaded ---------------------------------------------
+        for name, builder in [("deflate", deflate_roundtrip),
+                              ("cascaded", cascaded_roundtrip)]:
+            enc_f, dec_f, ratio_f = builder(bits)
+            t_enc, _ = time_fn(enc_f, repeats=3, warmup=1)
+            t_dec, _ = time_fn(dec_f, repeats=3, warmup=1)
+            results.append(CodecResult(name, ratio_f,
+                                       gbps(nbytes, t_enc), gbps(nbytes, t_dec)))
 
-    # --- deflate / cascaded ---------------------------------------------------
-    for name, builder in [("deflate", deflate_roundtrip),
-                          ("cascaded", cascaded_roundtrip)]:
-        enc_f, dec_f, ratio_f = builder(bits)
-        t_enc, _ = time_fn(enc_f, repeats=3, warmup=1)
-        t_dec, _ = time_fn(dec_f, repeats=3, warmup=1)
-        results.append(CodecResult(name, ratio_f,
-                                   gbps(nbytes, t_enc), gbps(nbytes, t_dec)))
-
-    fastest_other_enc = max(r.enc_gbps for r in results
-                            if not r.name.startswith("splitzip"))
     for r in results:
         emit("table2", r.name, dict(
             ratio=round(r.ratio, 4), enc_gbps=round(r.enc_gbps, 3),
             dec_gbps=round(r.dec_gbps, 3)))
-    sz = next(r for r in results if r.name == "splitzip-wire")
-    emit("table2", "derived", dict(
-        splitzip_enc_vs_fastest_other=round(sz.enc_gbps / fastest_other_enc, 2),
-        note="CPU-hosted; paper structure check, not absolute H200 numbers"))
+    fused = next(r for r in results if r.name == "splitzip-pallas")
+    twostage = next(r for r in results if r.name == "splitzip-pallas-2stage")
+    derived = dict(
+        fused_vs_2stage_enc=round(fused.enc_gbps / max(twostage.enc_gbps,
+                                                       1e-9), 3),
+        fused_vs_2stage_dec=round(fused.dec_gbps / max(twostage.dec_gbps,
+                                                       1e-9), 3),
+        note=("interpret-mode wall clock: the structural columns "
+              "(launches/scatters) carry the TPU claim, not CPU GB/s"))
+    if not SMOKE:
+        fastest_other_enc = max(r.enc_gbps for r in results
+                                if not r.name.startswith("splitzip"))
+        sz = next(r for r in results if r.name == "splitzip-wire")
+        derived["splitzip_enc_vs_fastest_other"] = round(
+            sz.enc_gbps / fastest_other_enc, 2)
+    emit("table2", "derived", derived)
+
+    if SMOKE:
+        # smoke runs are structural gates on tiny data; never overwrite the
+        # tracked full-workload snapshot with incomparable numbers
+        emit("table2", "snapshot", dict(skipped="smoke mode"))
+        return
+    snapshot = {
+        "workload_elems": int(bits.size),
+        "launch_structure": structure,
+        "codecs": {r.name: dict(ratio=round(r.ratio, 4),
+                                enc_gbps=round(r.enc_gbps, 3),
+                                dec_gbps=round(r.dec_gbps, 3))
+                   for r in results},
+        "derived": derived,
+    }
+    with open(SNAPSHOT_PATH, "w") as f:
+        json.dump(snapshot, f, indent=1, sort_keys=True)
+        f.write("\n")
+    emit("table2", "snapshot", dict(path=os.path.relpath(SNAPSHOT_PATH)))

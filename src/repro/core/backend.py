@@ -9,20 +9,28 @@ adding a real GPU/TPU backend later is a registration, not a refactor.
 Built-in backends:
 
   xla     : the pure-jnp reference codec (:mod:`repro.core.codec`) — jittable,
-            shardable, runs anywhere XLA runs.  The default.
-  pallas  : the Pallas TPU kernels (:mod:`repro.kernels.ops`) for the dense
-            encode/decode stages plus the XLA escape compaction.  Compiles to
-            Mosaic on TPU; runs in ``interpret=True`` mode on CPU, which is
-            how parity is validated in this container.
+            shardable, runs anywhere XLA runs.
+  pallas  : the single-pass fused Pallas kernels (:mod:`repro.kernels.ops`):
+            one ``pallas_call`` per encode/decode, escape compaction and
+            sparse correction fused in-kernel.  ``PallasBackend(fused=False)``
+            selects the pre-fusion two-stage structure (dense kernel + XLA
+            escape passes, :mod:`repro.kernels.twostage`) for A/B runs.
+            Compiles to Mosaic on TPU; runs in ``interpret=True`` mode on
+            CPU, which is how parity is validated in this container.
   wire    : the host numpy codec (:mod:`repro.core.wire`) — true
             variable-length byte serialization.  Not jittable (host-side
             bytes), but unconditionally lossless: the wire format has no
             escape-capacity limit, so ``ok`` is always True.
+  auto    : hardware dispatch (ROADMAP "real multi-backend dispatch"):
+            resolves to ``pallas`` when ``jax.default_backend() == "tpu"``,
+            else ``xla``.  The default for examples and launchers.
 
 Interface contract: ``encode`` returns an opaque per-backend compressed
-object; ``decode`` inverts it bit-exactly; ``ok``/``wire_bytes``/``raw_bytes``
-give the transfer engine a uniform view for the per-tensor raw-fallback
-accounting (``jnp.where(ok, wire_bytes, raw_bytes)``).
+object; ``decode`` inverts it bit-exactly; ``decode_bits`` yields the flat
+container bit stream without the reshape/bitcast tail (what the chunked
+transfer engine ships); ``ok``/``wire_bytes``/``raw_bytes`` give the
+transfer engine a uniform view for the per-tensor raw-fallback accounting
+(``jnp.where(ok, wire_bytes, raw_bytes)``).
 """
 
 from __future__ import annotations
@@ -54,6 +62,15 @@ class CodecBackend:
     def decode(self, comp: Any) -> jax.Array:
         raise NotImplementedError
 
+    def decode_bits(self, comp: Any) -> jax.Array:
+        """Decode to the flat container bit stream (u16/u8, n_elements long).
+
+        The chunked transfer engine consumes bit streams, not shaped floats;
+        backends that can stop before the reshape + bitcast tail override
+        this.  The fallback re-bitcasts the decoded tensor (free in-graph)."""
+        decoded = self.decode(comp)
+        return C.to_bits(jnp.asarray(decoded), comp.fmt).reshape(-1)
+
     def ok(self, comp: Any):
         """Did the compressed form stay within capacity (lossless as-is)?"""
         raise NotImplementedError
@@ -65,6 +82,15 @@ class CodecBackend:
     def raw_bytes(self, comp: Any) -> float:
         """Uncompressed bytes of the original tensor (the fallback cost)."""
         raise NotImplementedError
+
+    def for_retry(self, layout: str) -> "CodecBackend":
+        """Backend for the adaptive-capacity re-encode of an overflowed chunk.
+
+        Default: the backend itself (doubling ``cap`` is enough).  Backends
+        whose capacity is bounded by something other than ``cap`` override
+        this to hand the retry to a structure that can actually use the
+        doubled budget."""
+        return self
 
 
 class _InGraphBackend(CodecBackend):
@@ -94,25 +120,50 @@ class XlaBackend(_InGraphBackend):
     def decode(self, comp):
         return C.decode(comp)
 
+    def decode_bits(self, comp):
+        return C.decode_to_bits(comp)
+
 
 class PallasBackend(_InGraphBackend):
-    """Pallas dense kernels + XLA escape compaction (interpret mode off-TPU)."""
+    """Single-pass fused Pallas kernels (interpret mode off-TPU).
+
+    ``fused=True`` (default): one ``pallas_call`` per encode/decode with
+    in-kernel escape compaction / sparse correction.  ``fused=False``: the
+    pre-fusion two-stage structure (dense kernel + XLA escape passes), kept
+    for A/B benchmarking — same stream layout, bit-identical output.
+    """
 
     name = "pallas"
 
-    def __init__(self, interpret: bool | None = None):
+    def __init__(self, interpret: bool | None = None, fused: bool = True):
         # None => auto: compiled on TPU, interpreted elsewhere (kernels/ops.py)
         self.interpret = interpret
+        self.fused = fused
 
     def encode(self, x, codebook, *, chunk=C.DEFAULT_CHUNK, cap=C.DEFAULT_CAP,
                layout="chunked"):
         from repro.kernels import ops as kops
         return kops.encode(x, codebook, chunk=chunk, cap=cap, layout=layout,
-                           interpret=self.interpret)
+                           interpret=self.interpret, fused=self.fused)
 
     def decode(self, comp):
         from repro.kernels import ops as kops
-        return kops.decode(comp, interpret=self.interpret)
+        return kops.decode(comp, interpret=self.interpret, fused=self.fused)
+
+    def decode_bits(self, comp):
+        from repro.kernels import ops as kops
+        return kops.decode_bits(comp, interpret=self.interpret,
+                                fused=self.fused)
+
+    def for_retry(self, layout):
+        if layout == "global" and self.fused:
+            # A level-1 (per-chunk kernel buffer) overflow cannot be cleared
+            # by doubling the TOTAL cap — the fused kernel pins its per-chunk
+            # cap at MAX_FUSED_CAP.  Retry through the two-stage structure,
+            # which compacts globally with no level-1 bound; the stream
+            # layout is identical, so either path decodes the result.
+            return PallasBackend(interpret=self.interpret, fused=False)
+        return self
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,6 +237,17 @@ def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def _auto_backend() -> CodecBackend:
+    """Hardware dispatch: fused Pallas kernels on TPU, XLA reference elsewhere.
+
+    Resolved (and cached) at first ``get_backend("auto")`` call — the JAX
+    default backend is fixed per process, so the resolution is stable.  A GPU
+    (Triton/CUDA) backend would slot in here via ``register_backend``.
+    """
+    return PallasBackend() if jax.default_backend() == "tpu" else XlaBackend()
+
+
 register_backend("xla", XlaBackend)
 register_backend("pallas", PallasBackend)
 register_backend("wire", WireBackend)
+register_backend("auto", _auto_backend)

@@ -248,6 +248,45 @@ def scatter_escapes_global(
     return e_decoded.at[pos].set(esc_val.reshape(-1), mode="drop")
 
 
+def compact_chunked_to_global(
+    esc_pos_c: jax.Array, esc_val_c: jax.Array, esc_count_c: jax.Array,
+    chunk: int, total_cap: int, n: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Second-level compaction: per-chunk escape buffers -> one global buffer.
+
+    Consumes the PER-CHUNK buffers and counts the fused Pallas encode kernel
+    already produced (esc_pos_c u16[C, cap1], esc_val_c u8[C, cap1],
+    esc_count_c i32[C] true counts) instead of recomputing the escape mask
+    over the full stream — this XLA pass touches only ``C × cap1`` entries
+    (~cap1/chunk of the stream), not N elements.  Entries stay in position
+    order, so when nothing is dropped the output is bit-identical to
+    :func:`collect_escapes_global` on the same data.
+
+    ``ok`` is the conjunction of the global capacity check (total escapes <=
+    ``total_cap``) and the first-level one (no chunk exceeded ``cap1``): a
+    chunk that overflowed its level-1 buffer already lost escapes, so the
+    tensor must take the raw fallback even if the total would have fit.
+    This is (slightly) more conservative than the single-pass global
+    reference, never less lossless.
+    """
+    c, cap1 = esc_pos_c.shape
+    cnt = jnp.minimum(esc_count_c, cap1)               # entries present
+    jj = jnp.arange(cap1, dtype=jnp.int32)[None, :]
+    valid = jj < cnt[:, None]
+    offsets = (jnp.cumsum(cnt) - cnt)[:, None]         # exclusive over chunks
+    rank = offsets + jj                                # global rank per entry
+    gpos = (jnp.arange(c, dtype=jnp.uint32)[:, None] * chunk
+            + esc_pos_c.astype(jnp.uint32))
+    idx = jnp.where(valid & (rank < total_cap), rank, total_cap).reshape(-1)
+    esc_pos = jnp.full((total_cap,), n, dtype=jnp.uint32).at[idx].set(
+        gpos.reshape(-1), mode="drop")
+    esc_val = jnp.zeros((total_cap,), dtype=jnp.uint8).at[idx].set(
+        esc_val_c.reshape(-1), mode="drop")
+    total = jnp.sum(esc_count_c).astype(jnp.int32)
+    ok = (total <= total_cap) & jnp.all(esc_count_c <= cap1)
+    return esc_pos[None], esc_val[None], total[None], ok
+
+
 # ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
@@ -318,8 +357,11 @@ def encode(
     )
 
 
-def decode(ct: CompressedTensor) -> jax.Array:
-    """SplitZip decode: dense unpack + LUT + reassemble, then sparse overwrite."""
+def decode_to_bits(ct: CompressedTensor) -> jax.Array:
+    """SplitZip decode to the FLAT container bit stream (length n_elements):
+    dense unpack + LUT + reassemble, then sparse overwrite.  The transfer
+    engine consumes bits directly (it ships bit streams); ``decode`` adds
+    only the reshape + bitcast back to the original dtype."""
     code = unpack_nibbles(ct.packed) if len(ct.exponents) <= 16 else ct.packed
     e = decode_codes(code, ct.exponents)
     if ct.layout == "global":
@@ -327,8 +369,12 @@ def decode(ct: CompressedTensor) -> jax.Array:
     else:
         e = scatter_escapes(e, ct.esc_pos, ct.esc_val, ct.chunk)
     bits = join_fields(e, ct.sign_mantissa, ct.fmt)
-    n = ct.n_elements
-    bits = bits[:n].reshape(ct.shape)
+    return bits[:ct.n_elements]
+
+
+def decode(ct: CompressedTensor) -> jax.Array:
+    """SplitZip decode: dense unpack + LUT + reassemble, then sparse overwrite."""
+    bits = decode_to_bits(ct).reshape(ct.shape)
     return from_bits(bits, jnp.dtype(ct.dtype))
 
 

@@ -1,12 +1,26 @@
-"""Pallas TPU kernel: SplitZip dense decode path (paper §3.2, decode).
+"""Pallas TPU kernel: SplitZip single-pass fused decode (paper §3.2).
 
-Unpacks two 4-bit codes per byte, maps each through the 16-entry codebook
-(baked in as compile-time scalars — a one-hot select chain instead of a
-gather), and reassembles the BF16/FP8 bit pattern with the exact
-sign-mantissa stream.  The sparse escape overwrite happens *outside* the
-kernel (XLA scatter at escape positions), exactly mirroring the paper's
-"dense lookup path + separate sparse overwrite" structure that its Table 6
-ablation shows is 3.5× faster than sentinel-style in-stream detection.
+``decode_fused`` unpacks two 4-bit codes per byte, maps each through the
+16-entry codebook (baked in as compile-time scalars — a one-hot select chain
+instead of a gather), reassembles the BF16/FP8 bit pattern with the exact
+sign-mantissa stream, AND applies the sparse escape correction — all inside
+one ``pallas_call`` that emits the final container bits.  The paper's "dense
+lookup path + separate sparse overwrite" structure (its Table 6 ablation
+shows it 3.5× faster than sentinel-style in-stream detection) survives as
+two phases over the same VMEM tile; no post-kernel re-extract → scatter →
+join-fields pass over the full stream remains.
+
+The in-kernel correction is scatter-free: capacity slot j broadcasts its
+per-row ``(pos, val)`` pair across the lane axis and predicated-selects the
+exponent field where ``lane == pos`` — padding entries carry ``pos == chunk``
+and can never match.  The slot loop is statically unrolled to ``cap`` but
+predicated by ``pl.when(j < max per-row count in this block)`` (the per-row
+counts arrive as a kernel input — the encode kernel already computed them),
+so at the paper's escape rates only a handful of slots execute.
+
+``decode_dense`` (the pre-fusion dense-only kernel) is kept for the
+two-stage A/B path and for layouts whose correction stays outside the kernel
+(``layout='global'`` and oversized capacities — see kernels/ops.py).
 
 Tiling mirrors the encode kernel: (BLOCK_ROWS, CHUNK) tiles, CHUNK = 1024
 lanes-aligned, everything int32 on the VPU.
@@ -25,25 +39,58 @@ from repro.core.codebook import FORMATS
 DEFAULT_BLOCK_ROWS = 256
 
 
-def _decode_kernel(packed_ref, a_ref, bits_ref, *, exponents, mbits, bits_width):
-    packed = packed_ref[...].astype(jnp.int32)
-    a = a_ref[...].astype(jnp.int32)
-
-    # unpack: byte j holds codes (2j | 2j+1<<4) -> interleave back to (R, C)
+def _unpack_and_lut(packed, *, exponents):
+    """Shared dense phase: nibble unpack + one-hot × codebook contraction."""
     lo = packed & 0xF
     hi = (packed >> 4) & 0xF
     r, half = packed.shape
     code = jnp.stack([lo, hi], axis=-1).reshape(r, half * 2)
-
-    # one-hot × codebook contraction (no gather): e = Σ_k [code==k]·c_k
     e = jnp.zeros_like(code)
     for idx, ce in enumerate(exponents):  # static unroll, K <= 16
         e = jnp.where(code == idx, ce, e)
+    return e
 
-    # reassemble: x = (sign << (bits-1)) | (e << mbits) | mantissa
+
+def _assemble(e, a, *, mbits, bits_width):
+    """x = (sign << (bits-1)) | (e << mbits) | mantissa."""
     sign = (a >> mbits) & 1
-    out = (sign << (bits_width - 1)) | (e << mbits) | (a & ((1 << mbits) - 1))
-    bits_ref[...] = out.astype(bits_ref.dtype)
+    return (sign << (bits_width - 1)) | (e << mbits) | (a & ((1 << mbits) - 1))
+
+
+def _decode_kernel(packed_ref, a_ref, bits_ref, *, exponents, mbits, bits_width):
+    packed = packed_ref[...].astype(jnp.int32)
+    a = a_ref[...].astype(jnp.int32)
+    e = _unpack_and_lut(packed, exponents=exponents)
+    bits_ref[...] = _assemble(e, a, mbits=mbits, bits_width=bits_width
+                              ).astype(bits_ref.dtype)
+
+
+def _decode_fused_kernel(
+    packed_ref, a_ref, esc_pos_ref, esc_val_ref, esc_cnt_ref, bits_ref,
+    *, exponents, mbits, bits_width, chunk, cap,
+):
+    packed = packed_ref[...].astype(jnp.int32)
+    a = a_ref[...].astype(jnp.int32)
+    e = _unpack_and_lut(packed, exponents=exponents)
+    bits_ref[...] = _assemble(e, a, mbits=mbits, bits_width=bits_width
+                              ).astype(bits_ref.dtype)
+
+    # ---- fused sparse correction: predicated per-slot exponent overwrite ---
+    r = a.shape[0]
+    blockmax = jnp.max(esc_cnt_ref[...])
+    lane = jax.lax.broadcasted_iota(jnp.int32, (r, chunk), 1)
+    keep = ((1 << bits_width) - 1) ^ (((1 << (bits_width - mbits - 1)) - 1)
+                                      << mbits)  # clears the exponent field
+    for j in range(cap):  # static unroll; predicated off beyond blockmax
+        @pl.when(j < blockmax)
+        def _(j=j):
+            pos_j = esc_pos_ref[:, j:j + 1].astype(jnp.int32)  # padding: chunk
+            val_j = esc_val_ref[:, j:j + 1].astype(jnp.int32)
+            hit = lane == pos_j                # (r, chunk); never hits padding
+            cur = bits_ref[...].astype(jnp.int32)
+            bits_ref[...] = jnp.where(
+                hit, (cur & keep) | (val_j << mbits), cur
+            ).astype(bits_ref.dtype)
 
 
 @functools.partial(
@@ -66,7 +113,7 @@ def decode_dense(
         raise ValueError("stream shapes inconsistent with chunk")
     br = min(block_rows, rows)
     if rows % br:
-        raise ValueError(f"rows ({rows}) must divide block_rows ({br})")
+        raise ValueError(f"block_rows ({br}) must divide rows ({rows})")
     grid = (rows // br,)
     out_dtype = jnp.uint16 if spec["bits"] == 16 else jnp.uint8
     kernel = functools.partial(
@@ -86,3 +133,63 @@ def decode_dense(
         out_shape=jax.ShapeDtypeStruct((rows, chunk), out_dtype),
         interpret=interpret,
     )(packed, sign_mantissa)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("exponents", "fmt", "chunk", "block_rows", "interpret"),
+)
+def decode_fused(
+    packed: jax.Array,
+    sign_mantissa: jax.Array,
+    esc_pos: jax.Array,
+    esc_val: jax.Array,
+    esc_count: jax.Array,
+    exponents: tuple,
+    fmt: str = "bf16",
+    chunk: int = 1024,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Single-pass fused decode to FINAL container bits.
+
+    (rows, chunk//2) packed + (rows, chunk) sign-mantissa +
+    (rows, cap) esc_pos u16 / esc_val u8 + (rows, 1) esc_count i32 (clipped
+    to cap by the caller) -> (rows, chunk) u16/u8 bit patterns with the
+    sparse correction already applied.
+    """
+    spec = FORMATS[fmt]
+    rows, c = sign_mantissa.shape
+    cap = esc_pos.shape[1]
+    if c != chunk or packed.shape != (rows, chunk // 2):
+        raise ValueError("stream shapes inconsistent with chunk")
+    if esc_pos.shape != (rows, cap) or esc_val.shape != (rows, cap) \
+            or esc_count.shape != (rows, 1):
+        raise ValueError("escape stream shapes inconsistent with rows/cap")
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"block_rows ({br}) must divide rows ({rows})")
+    grid = (rows // br,)
+    out_dtype = jnp.uint16 if spec["bits"] == 16 else jnp.uint8
+    kernel = functools.partial(
+        _decode_fused_kernel,
+        exponents=tuple(int(e) for e in exponents),
+        mbits=spec["mbits"],
+        bits_width=spec["bits"],
+        chunk=chunk,
+        cap=cap,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, chunk // 2), lambda i: (i, 0)),
+            pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((br, cap), lambda i: (i, 0)),
+            pl.BlockSpec((br, cap), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, chunk), out_dtype),
+        interpret=interpret,
+    )(packed, sign_mantissa, esc_pos, esc_val, esc_count)

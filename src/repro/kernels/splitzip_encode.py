@@ -1,10 +1,13 @@
-"""Pallas TPU kernel: SplitZip dense encode path (paper §3.2, stage 1).
+"""Pallas TPU kernel: SplitZip single-pass fused encode (paper §3.2).
 
-The kernel implements the *dense* transformation — field split, codebook
-lookup, nibble packing, escape-mask emission — over VMEM tiles.  The sparse
-escape *collection* (stage 2) is deliberately outside the kernel (XLA cumsum +
-bounded scatter), mirroring the paper's two-stage encode: "Using a separate
-escape-collection stage keeps the common path simple and regular."
+``encode_fused`` emits the complete per-chunk compressed streams — field
+split, codebook lookup, nibble packing, AND the sparse escape compaction —
+from one ``pallas_call``.  The paper describes a two-stage encode ("a
+separate escape-collection stage keeps the common path simple and regular");
+that structure survives *inside* the kernel as two phases over the same VMEM
+tile, so the bit stream is read from HBM exactly once and no post-kernel
+full-stream pass remains.  The pre-fusion dense-only kernel is kept as
+``encode_dense`` for the two-stage A/B path (:mod:`repro.kernels.twostage`).
 
 TPU adaptation (DESIGN.md §2): the GPU version gathers through a 256-byte
 encode LUT; a per-lane byte gather is not VPU-shaped, so we bake the 16
@@ -12,11 +15,30 @@ calibrated exponents in as compile-time scalars and evaluate 16 broadcast
 compares per element.  All arithmetic is int32 (native VPU width); inputs and
 outputs are narrow integer streams.
 
+In-kernel escape compaction (the fused stage 2) is gather/scatter-free:
+
+  rank   : per-row inclusive prefix sum of the escape mask (log2(chunk)
+           shift-add steps — Hillis-Steele, VPU-shaped, no lax.cumsum
+           dependency in Mosaic),
+  slot j : ``esc_pos[r, j] = chunk - Σ_c (chunk - c)·[rank masked == j+1]``
+           and ``esc_val[r, j] = Σ_c e[r, c]·[rank masked == j+1]`` — one
+           compare + two masked reductions per capacity slot.  A row with
+           fewer than j+1 escapes contributes an empty mask, so the slot
+           naturally lands on the padding convention (pos == chunk, val == 0).
+
+The slot loop is statically unrolled to ``cap`` iterations but predicated by
+``pl.when(j < max escape count in this block)``: at the paper's escape rates
+(ε ≈ 0.16%, ~2 escapes per 1024-chunk) only a handful of slots execute, so
+the fused stage adds ~O(blockmax) VPU passes — comparable to the 16-compare
+dense stage — instead of cap passes.  Capacities above ``MAX_FUSED_CAP`` are
+not fused (the unroll would dominate); :mod:`repro.kernels.ops` routes those
+to the two-stage path.
+
 Tiling: the flat bit stream is viewed as (rows, CHUNK) with CHUNK = the
 escape-chunk size (1024 = 8 sublanes × 128 lanes, hardware-aligned).  Each
 grid step processes BLOCK_ROWS rows; with BLOCK_ROWS = 256 the working set is
-  in  : 256×1024×4B (i32 upcast of the u16 bits)   = 1.0 MiB
-  out : a (1B) + packed (0.5B) + esc mask (1B)      = 0.64 MiB
+  in  : 256×1024×4B (i32 upcast of the u16 bits)     = 1.0 MiB
+  out : a (1B) + packed (0.5B) + escapes (~3B·cap/chunk) = 0.6 MiB
 comfortably inside a v5e core's ~16 MiB VMEM with double buffering.
 """
 
@@ -32,27 +54,98 @@ from repro.core.codebook import FORMATS
 
 DEFAULT_BLOCK_ROWS = 256
 
+#: Largest per-chunk escape capacity the fused kernel will unroll; above
+#: this the compaction loop would dominate the kernel and the two-stage
+#: path wins (see kernels/ops.py dispatch).
+MAX_FUSED_CAP = 128
 
-def _encode_kernel(bits_ref, a_ref, packed_ref, esc_ref, *, exponents, mbits, ebits):
-    x = bits_ref[...].astype(jnp.int32)
-    # field split: e = (x >> mbits) & emask ; a = sign-in-bit-mbits | mantissa
+
+def fit_block_rows(rows: int, want: int) -> int:
+    """Largest divisor of ``rows`` that is <= want (grid must tile exactly)."""
+    br = min(want, rows)
+    while rows % br:
+        br -= 1
+    return max(br, 1)
+
+
+def _split_and_code(x, *, exponents, mbits, ebits):
+    """Shared dense phase: field split + compare-select code assignment."""
     e = (x >> mbits) & ((1 << ebits) - 1)
     a = ((x >> ebits) & (1 << mbits)) | (x & ((1 << mbits) - 1))
-    a_ref[...] = a.astype(jnp.uint8)
-
-    # compare-select code assignment: 16 broadcast compares, escapes -> code 0
     code = jnp.zeros_like(e)
     member = jnp.zeros(e.shape, dtype=jnp.bool_)
     for idx, ce in enumerate(exponents):  # static unroll, K <= 16
         hit = e == ce
         code = jnp.where(hit, idx, code)
         member = member | hit
-    esc_ref[...] = (~member).astype(jnp.uint8)
+    return e, a, code, member
 
-    # pack two 4-bit codes per byte: (R, C) -> (R, C//2, 2) -> lo | hi<<4
+
+def _pack_pairs(code):
+    """Pack two 4-bit codes per byte: (R, C) -> (R, C//2, 2) -> lo | hi<<4."""
     r, c = code.shape
     pairs = code.reshape(r, c // 2, 2)
-    packed_ref[...] = (pairs[..., 0] | (pairs[..., 1] << 4)).astype(jnp.uint8)
+    return (pairs[..., 0] | (pairs[..., 1] << 4)).astype(jnp.uint8)
+
+
+def _inclusive_cumsum_lanes(x, chunk):
+    """Hillis-Steele inclusive prefix sum along the lane (last) axis.
+
+    log2(chunk) shift-add steps on (rows, chunk) int32 — expressed as
+    pad+slice so it lowers on Mosaic without relying on lax.cumsum support.
+    """
+    s = x
+    d = 1
+    while d < chunk:
+        s = s + jnp.pad(s, ((0, 0), (d, 0)))[:, :chunk]
+        d *= 2
+    return s
+
+
+def _encode_kernel(bits_ref, a_ref, packed_ref, esc_ref, *, exponents, mbits, ebits):
+    x = bits_ref[...].astype(jnp.int32)
+    _, a, code, member = _split_and_code(
+        x, exponents=exponents, mbits=mbits, ebits=ebits)
+    a_ref[...] = a.astype(jnp.uint8)
+    esc_ref[...] = (~member).astype(jnp.uint8)
+    packed_ref[...] = _pack_pairs(code)
+
+
+def _encode_fused_kernel(
+    bits_ref, a_ref, packed_ref, esc_pos_ref, esc_val_ref, esc_cnt_ref,
+    *, exponents, mbits, ebits, chunk, cap,
+):
+    x = bits_ref[...].astype(jnp.int32)
+    e, a, code, member = _split_and_code(
+        x, exponents=exponents, mbits=mbits, ebits=ebits)
+    a_ref[...] = a.astype(jnp.uint8)
+    packed_ref[...] = _pack_pairs(code)
+
+    # ---- fused stage 2: per-row escape compaction, gather/scatter-free ----
+    r = x.shape[0]
+    is_esc = (~member).astype(jnp.int32)
+    s = _inclusive_cumsum_lanes(is_esc, chunk)      # rank+1 at each escape
+    count = s[:, chunk - 1:chunk]                   # (r, 1) TRUE per-row count
+    esc_cnt_ref[...] = count.astype(jnp.int32)
+    se = s * is_esc                                 # 0 off-escape, rank+1 on
+
+    # padding convention first (pos == chunk -> dropped on decode, val == 0);
+    # slots j >= the block's max count keep it without executing their pass
+    esc_pos_ref[...] = jnp.full((r, cap), chunk, dtype=jnp.uint16)
+    esc_val_ref[...] = jnp.zeros((r, cap), dtype=jnp.uint8)
+
+    blockmax = jnp.max(count)
+    # chunk - c per lane: one masked reduction gives both the position and
+    # the padding fallback (empty mask -> pos = chunk) without a gather
+    wpos = chunk - jax.lax.broadcasted_iota(jnp.int32, (r, chunk), 1)
+    for j in range(cap):  # static unroll; predicated off beyond blockmax
+        @pl.when(j < blockmax)
+        def _(j=j):
+            m = (se == j + 1).astype(jnp.int32)
+            pos_j = chunk - jnp.sum(wpos * m, axis=-1, keepdims=True)
+            val_j = jnp.sum(e * m, axis=-1, keepdims=True)
+            esc_pos_ref[:, j:j + 1] = pos_j.astype(jnp.uint16)
+            esc_val_ref[:, j:j + 1] = val_j.astype(jnp.uint8)
 
 
 @functools.partial(
@@ -66,10 +159,10 @@ def encode_dense(
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = True,
 ):
-    """Dense encode of a (rows, chunk) bit tensor.
+    """Dense-only encode of a (rows, chunk) bit tensor (two-stage A/B path).
 
     Returns (sign_mantissa u8[rows,chunk], packed u8[rows,chunk//2],
-    is_escape u8[rows,chunk]).
+    is_escape u8[rows,chunk]); escape compaction happens outside (XLA).
     """
     spec = FORMATS[fmt]
     rows, c = bits.shape
@@ -77,7 +170,7 @@ def encode_dense(
         raise ValueError(f"expected trailing dim == chunk ({chunk}), got {c}")
     br = min(block_rows, rows)
     if rows % br:
-        raise ValueError(f"rows ({rows}) must divide block_rows ({br})")
+        raise ValueError(f"block_rows ({br}) must divide rows ({rows})")
     grid = (rows // br,)
     kernel = functools.partial(
         _encode_kernel,
@@ -98,6 +191,70 @@ def encode_dense(
             jax.ShapeDtypeStruct((rows, chunk), jnp.uint8),
             jax.ShapeDtypeStruct((rows, chunk // 2), jnp.uint8),
             jax.ShapeDtypeStruct((rows, chunk), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(bits)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("exponents", "fmt", "chunk", "cap", "block_rows", "interpret"),
+)
+def encode_fused(
+    bits: jax.Array,
+    exponents: tuple,
+    fmt: str = "bf16",
+    chunk: int = 1024,
+    cap: int = 64,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Single-pass fused encode of a (rows, chunk) bit tensor.
+
+    One ``pallas_call`` returns the complete per-chunk streams:
+    (sign_mantissa u8[rows,chunk], packed u8[rows,chunk//2],
+    esc_pos u16[rows,cap], esc_val u8[rows,cap], esc_count i32[rows,1]).
+    ``esc_count`` is the TRUE per-row escape count (may exceed ``cap``;
+    entries beyond ``cap`` are dropped, matching
+    :func:`repro.core.codec.collect_escapes`).
+    """
+    spec = FORMATS[fmt]
+    rows, c = bits.shape
+    if c != chunk:
+        raise ValueError(f"expected trailing dim == chunk ({chunk}), got {c}")
+    if cap > MAX_FUSED_CAP:
+        raise ValueError(
+            f"cap ({cap}) exceeds MAX_FUSED_CAP ({MAX_FUSED_CAP}); use the "
+            "two-stage path (repro.kernels.twostage) for oversized capacities")
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"block_rows ({br}) must divide rows ({rows})")
+    grid = (rows // br,)
+    kernel = functools.partial(
+        _encode_fused_kernel,
+        exponents=tuple(int(e) for e in exponents),
+        mbits=spec["mbits"],
+        ebits=spec["ebits"],
+        chunk=chunk,
+        cap=cap,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, chunk), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((br, chunk // 2), lambda i: (i, 0)),
+            pl.BlockSpec((br, cap), lambda i: (i, 0)),
+            pl.BlockSpec((br, cap), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, chunk), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, chunk // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, cap), jnp.uint16),
+            jax.ShapeDtypeStruct((rows, cap), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, 1), jnp.int32),
         ],
         interpret=interpret,
     )(bits)

@@ -7,8 +7,10 @@ ratio, codec health, and (analytic) transfer-time speedup under a chosen
 link bandwidth.
 
 ``--codec-backend`` selects the codec implementation from the registry
-(``xla`` | ``pallas`` | ``wire``); ``--n-chunks`` > 1 switches the transfer
-stage to the chunked pipelined engine and reports per-chunk wire bytes.
+(``auto`` | ``xla`` | ``pallas`` | ``wire``; ``auto`` — the default —
+resolves to the fused Pallas kernels on TPU and the XLA reference
+elsewhere); ``--n-chunks`` > 1 switches the transfer stage to the chunked
+pipelined engine and reports per-chunk wire bytes.
 """
 
 from __future__ import annotations
@@ -51,9 +53,11 @@ def main(argv=None):
     ap.add_argument("--link-gbps", type=float, default=100.0,
                     help="simulated PD link (Gbit/s) for the analytic report")
     ap.add_argument("--no-compress", action="store_true")
-    ap.add_argument("--codec-backend", default="xla",
+    ap.add_argument("--codec-backend", default="auto",
                     choices=sorted(available_backends()),
-                    help="codec backend registry key (core/backend.py)")
+                    help="codec backend registry key (core/backend.py); "
+                         "'auto' resolves to the fused pallas kernels on "
+                         "TPU, xla elsewhere")
     ap.add_argument("--n-chunks", type=int, default=1,
                     help=">1 => chunked pipelined transfer engine")
     args = ap.parse_args(argv)
@@ -90,7 +94,9 @@ def main(argv=None):
     print(f"cache wire bytes     : {eng.stats.wire_bytes:,.0f}")
     print(f"transfer ratio       : {eng.stats.transfer_ratio:.3f}x")
     print(f"codec ok (no overflow): {eng.stats.codec_ok}")
-    print(f"codec backend        : {args.codec_backend}")
+    resolved = eng.tc.get_backend().name
+    print(f"codec backend        : {args.codec_backend}"
+          + (f" (resolved: {resolved})" if args.codec_backend == "auto" else ""))
     if eng.stats.chunk_wire_bytes:
         per = eng.stats.chunk_wire_bytes
         print(f"pipelined chunks     : {len(per)} shipped "

@@ -48,6 +48,8 @@ class EngineStats:
     # per-chunk wire bytes, one entry per pipeline chunk per transfer call
     # (chunked mode only; the whole-tensor path leaves this empty)
     chunk_wire_bytes: List[float] = dataclasses.field(default_factory=list)
+    # chunks re-encoded at doubled escape capacity (adaptive capacity)
+    chunk_retries: int = 0
 
     @property
     def transfer_ratio(self) -> float:
@@ -118,6 +120,7 @@ class DisaggregatedEngine:
         cache, cstats = T.transfer_cache_chunked(state.cache, self.tc)
         self.stats.wire_bytes += cstats.wire_bytes
         self.stats.chunk_wire_bytes.extend(cstats.chunk_wire_bytes)
+        self.stats.chunk_retries += cstats.n_retries
         self.stats.codec_ok &= cstats.all_ok
         return DecodeState(cache=cache, cache_len=state.cache_len)
 

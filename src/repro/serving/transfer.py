@@ -12,8 +12,11 @@ overflow) selects compressed vs raw payload per tensor, so adversarial
 activation distributions degrade to raw-speed transfer, never to corruption.
 
 Codec selection is pluggable: every encode/decode in this module goes through
-the :mod:`repro.core.backend` registry (``TransferConfig.backend`` — ``xla``,
-``pallas``, or ``wire``), never through a codec module directly.  Transfer
+the :mod:`repro.core.backend` registry (``TransferConfig.backend`` — ``auto``,
+``xla``, ``pallas``, or ``wire``), never through a codec module directly.
+On the chunked path decompression uses ``decode_bits`` — the fused Pallas
+decode kernel emits exactly the bit stream the pipe ships, so no
+reshape/bitcast tail runs between decode and reassembly.  Transfer
 granularity is pluggable too: ``TransferConfig.n_chunks > 1`` switches from
 whole-tensor encode→ship→decode to the chunked pipelined engine
 (``transfer_cache_chunked``), which drives ``ChunkSchedule`` so encode of
@@ -287,6 +290,9 @@ class ChunkedTransferStats:
     chunk_ok: List[bool]            # escape capacity held for this chunk?
     raw_passthrough_bytes: float    # non-bf16 leaves shipped outside the pipe
     n_elements: int                 # bf16 elements routed through the pipe
+    # chunks whose first encode overflowed and were re-encoded once at
+    # doubled capacity (adaptive capacity; chunk_ok reflects the retry result)
+    chunk_retried: List[bool] = dataclasses.field(default_factory=list)
 
     @property
     def wire_bytes(self) -> float:
@@ -295,6 +301,10 @@ class ChunkedTransferStats:
     @property
     def all_ok(self) -> bool:
         return all(self.chunk_ok)
+
+    @property
+    def n_retries(self) -> int:
+        return sum(self.chunk_retried)
 
 
 def split_cache_segments(cache: Dict, n_chunks: int, align: int
@@ -347,9 +357,13 @@ def transfer_cache_chunked(cache: Dict, tc: TransferConfig
     Drives ``ChunkSchedule(n).stages()``: each schedule step encodes one
     chunk, "transfers" the previous one (local mode: accounting + payload
     hand-off; the mesh path ships these same per-chunk streams), and decodes
-    the one before that.  A chunk whose escape capacity overflows ships its
-    raw bits instead (per-chunk fallback), so the reassembled cache is
-    bit-identical to the input unconditionally.
+    the one before that — straight to the shipped bit stream via
+    ``decode_bits`` (the fused pallas backend emits these bits from its
+    single decode kernel).  A chunk whose escape capacity overflows is
+    re-encoded ONCE at doubled capacity (adaptive capacity — recovers
+    heavy-tailed chunks; recorded in ``ChunkedTransferStats.chunk_retried``)
+    and only then falls back to shipping its raw bits, so the reassembled
+    cache is bit-identical to the input unconditionally.
     """
     be = tc.get_backend()
     segments, metas, raw = split_cache_segments(cache, tc.n_chunks, tc.chunk)
@@ -360,7 +374,8 @@ def transfer_cache_chunked(cache: Dict, tc: TransferConfig
             chunk_wire_bytes=[float(s.shape[0] * 2) for s in segments],
             chunk_ok=[True] * len(segments),
             raw_passthrough_bytes=raw_pass,
-            n_elements=int(sum(s.shape[0] for s in segments)))
+            n_elements=int(sum(s.shape[0] for s in segments)),
+            chunk_retried=[False] * len(segments))
         return cache, stats
 
     def _cap(n):
@@ -375,6 +390,7 @@ def transfer_cache_chunked(cache: Dict, tc: TransferConfig
     decoded_bits: Dict[int, jax.Array] = {}
     wire_per_chunk: List[float] = [0.0] * n_seg
     ok_per_chunk: List[bool] = [True] * n_seg
+    retried_per_chunk: List[bool] = [False] * n_seg
 
     for enc_i, xfer_i, dec_i in ChunkSchedule(n_seg).stages():
         if 0 <= enc_i < n_seg:
@@ -384,6 +400,17 @@ def transfer_cache_chunked(cache: Dict, tc: TransferConfig
         if 0 <= xfer_i < n_seg:
             ct = encoded.pop(xfer_i)
             okx = bool(be.ok(ct))
+            if not okx:
+                # adaptive capacity: one re-encode at doubled cap recovers
+                # the ratio on heavy-tailed chunks before the raw fallback
+                # (for_retry lets a backend swap in a structure that can
+                # actually use the doubled budget, e.g. fused-global pallas)
+                ct2 = be.for_retry(tc.layout).encode(
+                    segments[xfer_i], tc.codebook, chunk=tc.chunk,
+                    cap=2 * _cap(segments[xfer_i].shape[0]), layout=tc.layout)
+                retried_per_chunk[xfer_i] = True
+                if bool(be.ok(ct2)):
+                    ct, okx = ct2, True
             ok_per_chunk[xfer_i] = okx
             wire_per_chunk[xfer_i] = (
                 float(be.wire_bytes(ct)) if okx
@@ -396,8 +423,10 @@ def transfer_cache_chunked(cache: Dict, tc: TransferConfig
             if ct is None:  # raw fallback: the original bits were shipped
                 decoded_bits[dec_i] = segments[dec_i]
             else:
-                decoded_bits[dec_i] = C.to_bits(be.decode(ct), tc.codebook.fmt
-                                                ).reshape(-1)
+                # decode straight to the bit stream the pipe ships — the
+                # fused pallas path emits these bits from its single kernel
+                decoded_bits[dec_i] = jnp.asarray(
+                    be.decode_bits(ct)).reshape(-1)
 
     bits_out = jnp.concatenate([decoded_bits[i] for i in range(n_seg)]) \
         if n_seg > 1 else decoded_bits[0]
@@ -405,7 +434,8 @@ def transfer_cache_chunked(cache: Dict, tc: TransferConfig
     stats = ChunkedTransferStats(
         chunk_wire_bytes=wire_per_chunk, chunk_ok=ok_per_chunk,
         raw_passthrough_bytes=raw_pass,
-        n_elements=int(sum(s.shape[0] for s in segments)))
+        n_elements=int(sum(s.shape[0] for s in segments)),
+        chunk_retried=retried_per_chunk)
     return out, stats
 
 
