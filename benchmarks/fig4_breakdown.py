@@ -23,7 +23,7 @@ from repro.core import codebook as cbm
 from repro.core.pipeline import CodecProfile, pipelined_transfer_time
 from repro.serving.transfer import TransferConfig, transfer_report
 
-N_CHUNKS = 8  # pipelined-engine granularity (transfer_cache_chunked default)
+N_CHUNKS = 8  # pipelined-engine granularity (TransferPlan n_chunks)
 
 FIXED = 5e-3  # per-transfer fixed cost at batch granularity
 

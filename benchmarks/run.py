@@ -28,6 +28,9 @@ MODULES = [
     "fig4_breakdown",
     "fig5_layerwise",
     "appendix_a_hiding",
+    # needs 8 host devices: run as its own process (CI --only xpod_chunked);
+    # skips gracefully inside a full in-process sweep
+    "xpod_chunked_smoke",
 ]
 
 RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results",

@@ -48,7 +48,8 @@ from benchmarks.common import (CodecResult, bench_config, cascaded_roundtrip,
 from repro.core import backend as B
 from repro.core import codebook as cbm
 from repro.core import codec as C
-from repro.serving.transfer import TransferConfig
+from repro.serving.plan import TransferPlan
+from repro.serving.transfer import TransferConfig, transfer_cache_chunked
 
 SPLITZIP_BACKENDS = ("wire", "xla", "pallas")
 
@@ -140,6 +141,39 @@ def _measure_backend(name: str, be, x, cb, bits, nbytes, repeats) -> CodecResult
     return CodecResult(name, ratio, gbps(nbytes, t_enc), gbps(nbytes, t_dec))
 
 
+def _planned_vs_legacy_transfer(x, cb, nbytes, repeats) -> dict:
+    """Plan/execute API vs the one-shot shim on the chunked local engine.
+
+    The shim rebuilds the TransferPlan (route resolution, segmentation,
+    capacity schedule) on EVERY call; the session builds it once and reuses
+    it — the compile-once/run-many win of the plan API, measured on the same
+    bit-exact pipeline.  Also reports the per-call wire bytes so the row
+    doubles as a ratio regression gate."""
+    cache = {"kv": x}
+    tc = TransferConfig(codebook=cb, backend="xla", n_chunks=8)
+    sess = TransferPlan.build(cache, tc).session()
+
+    def _planned():
+        out = sess.transfer(cache)
+        jax.block_until_ready(jax.tree.leaves(out))
+
+    def _legacy():
+        out, _ = transfer_cache_chunked(cache, tc)
+        jax.block_until_ready(jax.tree.leaves(out))
+
+    _planned(); _legacy()   # warmup (jit caches shared: same shapes)
+    t_planned, _ = time_fn(_planned, repeats=repeats)
+    t_legacy, _ = time_fn(_legacy, repeats=repeats)
+    stats = sess.last_stats
+    return dict(
+        planned_gbps=round(gbps(nbytes, t_planned), 3),
+        legacy_gbps=round(gbps(nbytes, t_legacy), 3),
+        planned_vs_legacy=round(t_legacy / max(t_planned, 1e-12), 3),
+        n_chunks=len(stats.chunk_wire_bytes),
+        wire_ratio=round(nbytes / max(stats.wire_bytes, 1.0), 4),
+        retries=stats.n_retries)
+
+
 def run(emit) -> None:
     bits = _workload()
     nbytes = bits.nbytes
@@ -157,6 +191,10 @@ def run(emit) -> None:
     results.append(_measure_backend(
         "splitzip-pallas-2stage", B.PallasBackend(fused=False), x, cb, bits,
         nbytes, repeats))
+
+    # --- planned vs legacy transfer (plan/execute API regression row) -------
+    transfer_row = _planned_vs_legacy_transfer(x, cb, nbytes, repeats)
+    emit("table2", "transfer-planned-vs-legacy", transfer_row)
 
     # --- fused launch structure (the property the fusion exists for) --------
     structure = _launch_structure(x, cb)
@@ -229,6 +267,7 @@ def run(emit) -> None:
     snapshot = {
         "workload_elems": int(bits.size),
         "launch_structure": structure,
+        "transfer": transfer_row,
         "codecs": {r.name: dict(ratio=round(r.ratio, 4),
                                 enc_gbps=round(r.enc_gbps, 3),
                                 dec_gbps=round(r.dec_gbps, 3))

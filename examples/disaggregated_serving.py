@@ -81,6 +81,9 @@ def main():
     print(f"compressed == uncompressed generation: {identical} "
           f"(paper Table 9: lossless => zero output difference)")
     assert identical, "SplitZip must be bit-exact end to end"
+    # the engine resolved its per-leaf policy ONCE into a TransferPlan and
+    # ran every transfer through the cached TransferSession:
+    print(eng_sz.describe_plan())
     print(f"wire ratio achieved: {eng_sz.stats.transfer_ratio:.3f}x "
           f"(paper: 1.324x; theoretical limit 1.333x)")
     print(f"codec escape-capacity ok: {eng_sz.stats.codec_ok}  "

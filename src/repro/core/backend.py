@@ -86,11 +86,41 @@ class CodecBackend:
     def for_retry(self, layout: str) -> "CodecBackend":
         """Backend for the adaptive-capacity re-encode of an overflowed chunk.
 
-        Default: the backend itself (doubling ``cap`` is enough).  Backends
+        Default: the backend itself (growing ``cap`` is enough).  Backends
         whose capacity is bounded by something other than ``cap`` override
         this to hand the retry to a structure that can actually use the
-        doubled budget."""
+        grown budget."""
         return self
+
+    def capacity_schedule(self, layout: str, cap: int, n: int, *,
+                          doublings: int = 2, global_budget: float = 0.05
+                          ) -> Tuple[Tuple["CodecBackend", str, int], ...]:
+        """Plan-time geometric retry schedule for one tensor/chunk of ``n``
+        elements: ``(backend, layout, cap)`` attempts, tried in order until
+        one encode's ``ok`` holds; exhaustion means the raw fallback.
+
+        The default is ``cap -> 2*cap -> 4*cap -> layout='global'``: two
+        doublings of the level-0 capacity, then a last-resort switch to the
+        global layout whose single escape pool (sized by ``global_budget``)
+        absorbs heavy-tailed chunks that per-chunk buffers cannot.  Each step
+        routes through :meth:`for_retry` so a backend whose capacity is bound
+        elsewhere (e.g. the fused kernel's per-chunk buffer) swaps in a
+        structure that can actually use the grown budget.
+
+        ``doublings=0`` disables retries entirely (single base attempt, no
+        global last resort) — for callers that want fail-fast-to-raw
+        latency bounds on the hot path."""
+        steps = [(self, layout, cap)]
+        if doublings <= 0:
+            return tuple(steps)
+        be, c = self, cap
+        for _ in range(doublings):
+            c *= 2
+            be = be.for_retry(layout)
+            steps.append((be, layout, c))
+        gcap = max(C.default_global_cap(n, global_budget), 2 * c)
+        steps.append((be.for_retry("global"), "global", gcap))
+        return tuple(steps)
 
 
 class _InGraphBackend(CodecBackend):
@@ -235,6 +265,19 @@ def get_backend(name: str) -> CodecBackend:
 
 def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
+
+
+def resolve_backend(name: str, *, require_jittable: bool = False) -> CodecBackend:
+    """Plan-time backend resolution: one registry lookup per
+    :class:`~repro.serving.plan.TransferPlan` build instead of one per
+    transfer call.  ``require_jittable`` rejects host-side backends up front
+    (mesh execution traces the codec inside ``shard_map``)."""
+    be = get_backend(name)
+    if require_jittable and not be.jittable:
+        raise ValueError(
+            f"backend {name!r} is host-side and cannot run inside "
+            "shard_map; use a jittable backend ('xla', 'pallas')")
+    return be
 
 
 def _auto_backend() -> CodecBackend:

@@ -16,7 +16,7 @@ transfer engine to overlap encode / transfer / decode.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +54,34 @@ def pipelined_transfer_time(s_bytes: float, p: CodecProfile, n_chunks: int) -> f
     t_enc, t_xfer, t_dec = stage_times(per, p)
     bottleneck = max(t_enc, t_xfer, t_dec)
     return t_enc + t_xfer + t_dec + (n_chunks - 1) * bottleneck + p.fixed_overhead_s
+
+
+def flowshop_makespan(chunk_stage_times: Sequence[Tuple[float, float, float]]
+                      ) -> float:
+    """3-stage flowshop recurrence over per-chunk (enc, xfer, dec) times:
+
+        done_enc[i]  = done_enc[i-1] + T_enc[i]
+        done_xfer[i] = max(done_xfer[i-1], done_enc[i])  + T_xfer[i]
+        done_dec[i]  = max(done_dec[i-1], done_xfer[i]) + T_dec[i]
+    """
+    d_enc = d_xfer = d_dec = 0.0
+    for t_enc, t_xfer, t_dec in chunk_stage_times:
+        d_enc = d_enc + t_enc
+        d_xfer = max(d_xfer, d_enc) + t_xfer
+        d_dec = max(d_dec, d_xfer) + t_dec
+    return d_dec
+
+
+def pipeline_makespan(chunk_bytes: Sequence[float], p: CodecProfile) -> float:
+    """Plan-aware pipeline time: the flowshop recurrence over the ACTUAL
+    per-chunk raw byte sizes a :class:`~repro.serving.plan.TransferPlan`
+    resolved (segments are codec-chunk aligned, so the last one is usually
+    short; equal-size chunks reduce to ``pipelined_transfer_time`` exactly).
+    """
+    if not chunk_bytes:
+        return p.fixed_overhead_s
+    return flowshop_makespan([stage_times(s, p) for s in chunk_bytes]
+                             ) + p.fixed_overhead_s
 
 
 def hiding_bandwidth(p: CodecProfile) -> float:

@@ -187,14 +187,23 @@ class ShardingPolicy:
         return P(*([None] + [self._maybe(shape[1], dp)] +
                    [None] * (len(shape) - 2))) if len(shape) > 1 else P(None)
 
-    def cache_sharding(self, cache):
+    def cache_specs(self, cache):
+        """Pytree of PartitionSpecs matching ``cache`` (arrays or SDS).
+
+        This is what a mesh-targeted :class:`~repro.serving.plan.TransferPlan`
+        consumes as ``specs=``: the plan resolves the per-leaf shard layout
+        once at build time instead of re-deriving it per transfer call."""
         flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
         out = []
         for path, leaf in flat:
             name = "/".join(_key_str(k) for k in path)
-            out.append(NamedSharding(self.mesh,
-                                     self.spec_for_cache(name, tuple(leaf.shape))))
+            out.append(self.spec_for_cache(name, tuple(leaf.shape)))
         return jax.tree_util.tree_unflatten(treedef, out)
+
+    def cache_sharding(self, cache):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.cache_specs(cache),
+                            is_leaf=lambda x: isinstance(x, P))
 
     # -- parameter rules ---------------------------------------------------------
     # matched against the '/'-joined param path, first hit wins

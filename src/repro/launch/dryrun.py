@@ -65,6 +65,8 @@ POLICY_VARIANTS = {
     "xferonly_global": dict(pd_disaggregated=True),
     "xferonly_tight": dict(pd_disaggregated=True),
     "xferonly_fp32": dict(pd_disaggregated=True),
+    # per-chunk ppermute with double-buffering (TransferPlan n_chunks > 1)
+    "xferonly_pipelined": dict(pd_disaggregated=True),
     # attention perf variants (EXPERIMENTS.md §Perf Cell A)
     "attn_bf16": {},
     "attn_kv4096": {},
@@ -81,6 +83,15 @@ ATTN_VARIANTS = {
 
 def make_policy(mesh, variant: str) -> ShardingPolicy:
     return ShardingPolicy(mesh, **POLICY_VARIANTS.get(variant, {}))
+
+
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on new jax and a one-element
+    list of dicts on the 0.4.x line this repo pins — normalize to a dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
 
 
 def _variant_ctx(variant: str):
@@ -109,6 +120,9 @@ def _transfer_config(variant: str):
         # beyond-paper: also hi/lo-split-compress fp32 recurrent states
         return T.TransferConfig(codebook=cb, layout="global",
                                 global_budget=0.0025, compress_fp32=True)
+    if variant.endswith("_pipelined"):
+        # chunked mesh path: per-chunk ppermute, double-buffered
+        return T.TransferConfig(codebook=cb, chunk=1024, cap=64, n_chunks=8)
     if variant.endswith("_tight"):
         # 0.25% escape budget: 16x the paper's mean escape rate; overflow
         # still detected per tensor and falls back to raw
@@ -129,23 +143,20 @@ def build_lowerable(cfg: ArchConfig, shape: ShapeConfig, policy: ShardingPolicy,
         # isolated paper pipeline: cache in -> SplitZip -> DCN hop -> cache out
         if "pod" not in mesh.shape:
             raise ValueError("transfer variants need the multi-pod mesh")
-        from repro.serving import transfer as T
+        from repro.serving.plan import TransferPlan
         tc = _transfer_config(variant)
         state_abs = M.abstract_state(cfg, shape.global_batch, shape.seq_len)
         cache_abs = state_abs.cache
-        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abs)
-        specs = jax.tree_util.tree_unflatten(
-            treedef,
-            [policy.spec_for_cache(
-                "/".join(str(getattr(k, "key", k)) for k in path),
-                tuple(leaf.shape)) for path, leaf in flat])
+        specs = policy.cache_specs(cache_abs)
         cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                                 is_leaf=lambda x: isinstance(x, P))
+        # the plan resolves routes/segments/specs once, from abstract shapes
+        session = TransferPlan.build(cache_abs, tc, mesh=mesh,
+                                     specs=specs).session()
 
         def fn(cache):
             with use_policy(policy):
-                return T.transfer_cache_cross_pod(cache, mesh, tc, specs=specs,
-                                                  select_dst=False)
+                return session.transfer(cache, select_dst=False)
 
         jitted = jax.jit(fn, in_shardings=(cache_sh,))
         return jitted, (cache_abs,)
@@ -156,7 +167,7 @@ def build_lowerable(cfg: ArchConfig, shape: ShapeConfig, policy: ShardingPolicy,
             raise ValueError("transfer variants apply to prefill shapes")
         if "pod" not in mesh.shape:
             raise ValueError("transfer variants need the multi-pod mesh")
-        from repro.serving import transfer as T
+        from repro.serving.plan import TransferPlan
         from repro.serving.prefill import prefill_step
         tc = _transfer_config(variant)
 
@@ -171,14 +182,12 @@ def build_lowerable(cfg: ArchConfig, shape: ShapeConfig, policy: ShardingPolicy,
             with use_policy(policy):
                 out = prefill_step(params, batch, cfg, max_seq=shape.seq_len)
                 cache = out.state.cache
-                flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
-                specs = jax.tree_util.tree_unflatten(
-                    treedef,
-                    [policy.spec_for_cache(
-                        "/".join(str(getattr(k, "key", k)) for k in path),
-                        tuple(leaf.shape)) for path, leaf in flat])
-                moved = T.transfer_cache_cross_pod(cache, mesh, tc,
-                                                   specs=specs)
+                # plan built at trace time (shapes are static): one build
+                # per compilation, executed by the session inside the jit
+                session = TransferPlan.build(
+                    cache, tc, mesh=mesh,
+                    specs=policy.cache_specs(cache)).session()
+                moved = session.transfer(cache)
                 return out.first_token, moved
 
         jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh))
@@ -255,7 +264,7 @@ def measure_costs(cfg: ArchConfig, shape: ShapeConfig, policy: ShardingPolicy,
         with scanctl.cost_mode(True), _variant_ctx(variant):
             jitted, args = build_lowerable(cfg_l, shape, policy, variant)
             compiled = jitted.lower(*args).compile()
-        cost = dict(compiled.cost_analysis() or {})
+        cost = _cost_dict(compiled)
         colls = RL.collective_bytes_from_hlo(compiled.as_text())
         return {
             "flops": float(cost.get("flops", 0.0)),
@@ -312,7 +321,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-        cost = dict(compiled.cost_analysis() or {})
+        cost = _cost_dict(compiled)
         try:
             mem = compiled.memory_analysis()
             mem_stats = {

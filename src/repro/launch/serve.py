@@ -10,7 +10,11 @@ link bandwidth.
 (``auto`` | ``xla`` | ``pallas`` | ``wire``; ``auto`` — the default —
 resolves to the fused Pallas kernels on TPU and the XLA reference
 elsewhere); ``--n-chunks`` > 1 switches the transfer stage to the chunked
-pipelined engine and reports per-chunk wire bytes.
+pipelined engine and reports per-chunk wire bytes; ``--compress-fp32``
+routes fp32 recurrent states through the plan's hi/lo split (folded into
+the chunked stream).  The engine resolves all of this ONCE into a
+``TransferPlan`` (printed at the end as the per-leaf routing table) and
+executes it through a ``TransferSession`` on every transfer.
 """
 
 from __future__ import annotations
@@ -60,6 +64,9 @@ def main(argv=None):
                          "TPU, xla elsewhere")
     ap.add_argument("--n-chunks", type=int, default=1,
                     help=">1 => chunked pipelined transfer engine")
+    ap.add_argument("--compress-fp32", action="store_true",
+                    help="hi/lo-split-compress fp32 recurrent states "
+                         "(SSM/RG-LRU) through the plan's fp32_hilo route")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -78,7 +85,9 @@ def main(argv=None):
     eng = DisaggregatedEngine(cfg, params, cb,
                               compress=not args.no_compress,
                               backend=args.codec_backend,
-                              n_chunks=args.n_chunks, profile=profile)
+                              n_chunks=args.n_chunks,
+                              compress_fp32=args.compress_fp32,
+                              profile=profile)
 
     shape = ShapeConfig("serve", seq_len=args.prompt_len,
                         global_batch=args.batch, kind="prefill")
@@ -97,6 +106,10 @@ def main(argv=None):
     resolved = eng.tc.get_backend().name
     print(f"codec backend        : {args.codec_backend}"
           + (f" (resolved: {resolved})" if args.codec_backend == "auto" else ""))
+    print(eng.describe_plan())
+    if eng.stats.chunk_retries:
+        print(f"capacity schedule    : {eng.stats.chunk_retries} units "
+              f"retried, {eng.stats.chunk_retry_steps} extra encode attempts")
     if eng.stats.chunk_wire_bytes:
         per = eng.stats.chunk_wire_bytes
         print(f"pipelined chunks     : {len(per)} shipped "

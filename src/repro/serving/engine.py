@@ -7,16 +7,18 @@ Two operating modes:
   real compress -> (simulated wire) -> decompress roundtrip through the
   in-graph codec, so bit-exactness of the whole serving path is checked
   end-to-end (paper Table 9).
-* **mesh** (dry-run, TPU): the transfer runs `transfer_cache_cross_pod`
-  (shard_map + ppermute over the pod axis); prefill/decode are pjit'd with
-  the sharding policy.
+* **mesh** (dry-run, TPU): the transfer runs a mesh-targeted ``TransferPlan``
+  (shard_map + per-chunk ppermute over the pod axis); prefill/decode are
+  pjit'd with the sharding policy.
 
-The codec implementation is selected via the ``backend`` registry key
-(``xla`` | ``pallas`` | ``wire`` — see :mod:`repro.core.backend`) and the
-transfer granularity via ``n_chunks``: 1 reproduces the additive
-whole-tensor path, >1 runs the chunked pipelined engine
-(``transfer_cache_chunked``), which records per-chunk wire bytes in
-``EngineStats.chunk_wire_bytes``.  Both paths are bit-exact by construction.
+The transfer stage is the plan/execute API: the engine builds ONE
+:class:`~repro.serving.plan.TransferPlan` per cache structure (per-leaf codec
+routes, chunk segmentation, capacity schedule resolved once) and executes it
+through a cached :class:`~repro.serving.session.TransferSession` on every
+``transfer`` call.  ``n_chunks == 1`` runs the whole-tensor granularity,
+``n_chunks > 1`` the chunked pipelined engine; both are bit-exact by
+construction, and per-chunk wire bytes / capacity-schedule retry steps land
+in ``EngineStats``.
 """
 
 from __future__ import annotations
@@ -34,6 +36,8 @@ from repro.core.pipeline import CodecProfile
 from repro.models import model as M
 from repro.models.kvcache import DecodeState, cache_bytes
 from repro.serving import transfer as T
+from repro.serving.plan import TransferPlan
+from repro.serving.session import TransferSession
 from repro.serving.decode import decode_loop
 from repro.serving.prefill import prefill_step
 
@@ -48,8 +52,13 @@ class EngineStats:
     # per-chunk wire bytes, one entry per pipeline chunk per transfer call
     # (chunked mode only; the whole-tensor path leaves this empty)
     chunk_wire_bytes: List[float] = dataclasses.field(default_factory=list)
-    # chunks re-encoded at doubled escape capacity (adaptive capacity)
+    # units (chunks/tensors) re-encoded on the geometric capacity schedule
     chunk_retries: int = 0
+    # total extra encode attempts across the schedule (cap -> 2cap -> 4cap ->
+    # layout='global'); > chunk_retries when a unit needed several steps
+    chunk_retry_steps: int = 0
+    # fp32 hi/lo route: raw lo mantissa halves shipped alongside the stream
+    fp32_lo_wire_bytes: float = 0.0
 
     @property
     def transfer_ratio(self) -> float:
@@ -62,14 +71,35 @@ class DisaggregatedEngine:
     def __init__(self, cfg: ArchConfig, params, codebook: Codebook,
                  *, compress: bool = True, chunk: int = 1024, cap: int = 64,
                  backend: str = "xla", n_chunks: int = 1,
+                 compress_fp32: bool = False,
                  profile: Optional[CodecProfile] = None):
         self.cfg = cfg
         self.params = params
         self.tc = T.TransferConfig(codebook=codebook, chunk=chunk, cap=cap,
                                    enabled=compress, backend=backend,
-                                   n_chunks=n_chunks)
+                                   n_chunks=n_chunks,
+                                   compress_fp32=compress_fp32)
         self.profile = profile
         self.stats = EngineStats()
+        self._session: Optional[TransferSession] = None
+
+    # -- plan/session caching ------------------------------------------------
+    def _session_for(self, cache) -> TransferSession:
+        """Build the TransferPlan once per cache structure; reuse its session
+        for every subsequent transfer (compile-once / run-many).  One
+        ``plan.matches`` walk per call doubles as the session's structure
+        validation (the transfer below passes ``check=False``)."""
+        if self._session is None or not self._session.plan.matches(cache):
+            self._session = TransferPlan.build(cache, self.tc).session()
+        return self._session
+
+    @property
+    def plan(self) -> Optional[TransferPlan]:
+        return self._session.plan if self._session is not None else None
+
+    def describe_plan(self) -> str:
+        """The resolved per-leaf routing table (empty before first transfer)."""
+        return self.plan.describe() if self.plan is not None else "(no plan yet)"
 
     # -- the three pipeline stages ------------------------------------------
     def prefill(self, batch: Dict, max_seq: Optional[int] = None):
@@ -80,9 +110,10 @@ class DisaggregatedEngine:
     def transfer(self, state: DecodeState) -> DecodeState:
         """Compress -> ship -> decompress.  Bit-exact by construction.
 
-        Escape-capacity overflow (``ok == False``) triggers the raw fallback —
-        per tensor on the whole-tensor path, per chunk on the pipelined path —
-        so losslessness is unconditional even on adversarial activation
+        Escape-capacity overflow (``ok == False``) walks the plan's geometric
+        capacity schedule and then triggers the raw fallback — per tensor on
+        the whole-tensor path, per chunk on the pipelined path — so
+        losslessness is unconditional even on adversarial activation
         distributions, and the accounting charges raw bytes for exactly the
         payload that actually shipped raw."""
         raw = T.raw_wire_bytes(state.cache)
@@ -90,38 +121,16 @@ class DisaggregatedEngine:
         if not self.tc.enabled or not state.cache:
             self.stats.wire_bytes += raw
             return state
-        if self.tc.n_chunks > 1:
-            return self._transfer_chunked(state)
-        be = self.tc.get_backend()
-        comp, rawleaves = T.compress_cache(state.cache, self.tc)
-        self.stats.wire_bytes += float(
-            T.compressed_wire_bytes(comp, rawleaves, backend=self.tc.backend))
-        self.stats.codec_ok &= all(bool(be.ok(ct)) for ct in comp.values())
-        # raw fallback for overflowed tensors (detected via the ok flag; in
-        # the mesh path this is the off-graph re-fetch — see DESIGN.md §2)
-        overflowed = {k for k, ct in comp.items() if not bool(be.ok(ct))}
-        if overflowed:
-            flat = jax.tree_util.tree_flatten_with_path(state.cache)[0]
-            originals = {T.leaf_key(p): leaf for p, leaf in flat}
-            comp = {k: v for k, v in comp.items() if k not in overflowed}
-            rawleaves = dict(rawleaves)
-            for k in overflowed:
-                # an overflowed fp32 hi-half means the whole fp32 leaf ships
-                # raw: drop its lo-half entry and restore the original leaf
-                base = k[:-3] if k.endswith("#hi") else k
-                rawleaves.pop(base + "#lo", None)
-                rawleaves[base] = originals[base]
-        cache = T.decompress_cache(comp, rawleaves, state.cache,
-                                   backend=self.tc.backend)
-        return DecodeState(cache=cache, cache_len=state.cache_len)
-
-    def _transfer_chunked(self, state: DecodeState) -> DecodeState:
-        """Pipelined transfer: per-chunk encode/ship/decode via ChunkSchedule."""
-        cache, cstats = T.transfer_cache_chunked(state.cache, self.tc)
+        sess = self._session_for(state.cache)
+        cache = sess.transfer(state.cache, check=False)
+        cstats = sess.last_stats
         self.stats.wire_bytes += cstats.wire_bytes
-        self.stats.chunk_wire_bytes.extend(cstats.chunk_wire_bytes)
-        self.stats.chunk_retries += cstats.n_retries
         self.stats.codec_ok &= cstats.all_ok
+        self.stats.chunk_retries += cstats.n_retries
+        self.stats.chunk_retry_steps += cstats.n_retry_steps
+        self.stats.fp32_lo_wire_bytes += cstats.fp32_lo_wire_bytes
+        if self.tc.n_chunks > 1:
+            self.stats.chunk_wire_bytes.extend(cstats.chunk_wire_bytes)
         return DecodeState(cache=cache, cache_len=state.cache_len)
 
     def decode(self, first_token: jax.Array, state: DecodeState,
@@ -144,4 +153,4 @@ class DisaggregatedEngine:
             return None
         return T.transfer_report(self.stats.raw_cache_bytes,
                                  self.stats.wire_bytes, self.profile,
-                                 n_chunks=self.tc.n_chunks)
+                                 n_chunks=self.tc.n_chunks, plan=self.plan)

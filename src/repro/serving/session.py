@@ -1,0 +1,506 @@
+"""TransferSession: executes a resolved :class:`TransferPlan` many times.
+
+One session == one (plan, execution-target) pair.  ``send(cache)`` runs the
+prefill-side work (encode + the wire hop), ``recv()`` the decode-side work,
+``transfer(cache)`` fuses both; ``last_stats`` carries per-call accounting.
+All serving consumers (``DisaggregatedEngine``, launchers, benchmarks,
+examples) go through this API — the free functions in
+:mod:`repro.serving.transfer` are deprecation shims over a one-shot plan.
+
+Three execution paths, selected by the plan:
+
+* **local / tensor** (``mesh=None, n_chunks == 1``): per-leaf encode ->
+  hand-off -> decode, per-tensor raw fallback, geometric capacity retries.
+* **local / chunked** (``mesh=None, n_chunks > 1``): the pipelined engine —
+  ``ChunkSchedule`` drives encode of chunk t / ship of t-1 / decode of t-2
+  over the plan's precomputed codec-chunk-aligned segments, with fp32 hi
+  halves folded into the stream and per-chunk retries + raw fallback.
+* **mesh** (``mesh=``): the same two granularities traced inside
+  ``shard_map`` over the 'pod' axis.  ``n_chunks > 1`` ships each chunk with
+  its own ``lax.ppermute`` and holds at most two chunks in flight
+  (double-buffering: encode of chunk t is issued while chunk t-1's permute
+  and chunk t-2's decode are outstanding), so the overlap is structural in
+  the traced program, not just modeled.  In-graph execution cannot branch on
+  the concrete ``ok`` flag, so the mesh path encodes once at plan capacity;
+  overflow is detected off-graph exactly as on the whole-tensor path.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import shard_map
+from repro.core.backend import CodecBackend, get_backend
+from repro.core.pipeline import ChunkSchedule
+from repro.serving.plan import TransferPlan, TransferStats, leaf_key
+
+_WIRE_INT = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+def _backend_for(comp_obj, be: CodecBackend) -> CodecBackend:
+    """Resolve the backend that can actually decode ``comp_obj``.
+
+    Wire payloads decode only with the wire backend, in-graph
+    CompressedTensors only with a jittable one (xla and pallas share the
+    stream layout, so either decodes either).  A mismatched backend is
+    corrected instead of crashing with an opaque AttributeError."""
+    from repro.core.backend import WireCompressed
+    if isinstance(comp_obj, WireCompressed):
+        return be if be.name == "wire" else get_backend("wire")
+    return be if be.jittable else get_backend("xla")
+
+
+def _permute_leaf(x: jax.Array, axis_name: str, src: int, dst: int) -> jax.Array:
+    """ppermute with the payload pinned to its exact bit width.
+
+    XLA CPU (and some TPU paths) upcast small-float collectives — doubling
+    the wire bytes and silently defeating the codec.  Bitcasting to a
+    same-width integer type before the collective guarantees the HLO moves
+    exactly the bytes we account for; the roundtrip is a bitcast, hence
+    lossless."""
+    if jnp.issubdtype(x.dtype, jnp.floating) and x.dtype.itemsize in _WIRE_INT:
+        w = _WIRE_INT[x.dtype.itemsize]
+        y = jax.lax.ppermute(jax.lax.bitcast_convert_type(x, w), axis_name,
+                             perm=[(src, dst)])
+        return jax.lax.bitcast_convert_type(y, x.dtype)
+    return jax.lax.ppermute(x, axis_name, perm=[(src, dst)])
+
+
+# ---------------------------------------------------------------------------
+# per-leaf encode/decode (tensor granularity; also the mesh whole-tensor body)
+# ---------------------------------------------------------------------------
+
+def _encode_scheduled(plan: TransferPlan, x, codebook, n: int, cap: int,
+                      *, scheduled: bool):
+    """Encode ``x`` down the plan's geometric capacity schedule.
+
+    Returns ``(ct, ok, extra_attempts)``.  ``scheduled=False`` (one-shot
+    shims, in-graph tracing) encodes once at plan capacity and leaves ``ok``
+    traced — the schedule's concrete ``ok`` branch is host-side control
+    flow."""
+    tc = plan.tc
+    ct = plan.backend.encode(x, codebook, chunk=tc.chunk, cap=cap,
+                             layout=tc.layout)
+    if not scheduled:
+        return ct, plan.backend.ok(ct), 0
+    if bool(plan.backend.ok(ct)):
+        return ct, True, 0
+    extra = 0
+    for be, layout, c in plan.schedule_for(n, cap)[1:]:
+        extra += 1
+        ct = be.encode(x, codebook, chunk=tc.chunk, cap=c, layout=layout)
+        if bool(be.ok(ct)):
+            return ct, True, extra
+    return ct, False, extra
+
+
+def _record_unit(stats: Optional[TransferStats], key: str, ok: bool,
+                 extra: int) -> None:
+    if stats is None:
+        return
+    stats.leaf_ok[key] = ok
+    stats.chunk_retried.append(extra > 0)
+    stats.chunk_retry_steps.append(extra)
+
+
+def encode_leaves(plan: TransferPlan, cache, *, scheduled: bool = True,
+                  stats: Optional[TransferStats] = None) -> Tuple[Dict, Dict]:
+    """Per-leaf route execution -> (comp, raw) in the legacy key convention:
+    ``comp[key]`` holds splitzip/fp8 streams, ``comp[key + '#hi']`` the fp32
+    hi half, ``raw[key + '#lo']`` its raw lo half, ``raw[key]`` passthrough
+    (including the raw fallback of units whose capacity schedule exhausted).
+
+    ``scheduled=False`` is the one-shot / in-graph mode: single encode at
+    plan capacity, streams kept regardless of the (traced) ``ok`` flag."""
+    tc = plan.tc
+    be = plan.backend
+    comp: Dict[str, object] = {}
+    raw: Dict[str, jax.Array] = {}
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+    for (path, leaf), r in zip(flat, plan.routes):
+        key = r.key
+        if r.route == "splitzip":
+            ct, ok, extra = _encode_scheduled(plan, leaf, tc.codebook,
+                                              r.n_elements, r.cap,
+                                              scheduled=scheduled)
+            if scheduled and not bool(ok):
+                raw[key] = leaf
+                if stats is not None:
+                    stats.leaf_wire_bytes[key] = r.raw_bytes
+                _record_unit(stats, key, False, extra)
+            else:
+                comp[key] = ct
+                if stats is not None:
+                    stats.leaf_wire_bytes[key] = float(be.wire_bytes(ct))
+                _record_unit(stats, key, True, extra)
+        elif r.route == "fp32_hilo":
+            u = jax.lax.bitcast_convert_type(leaf, jnp.uint32)
+            hi = (u >> 16).astype(jnp.uint16)
+            lo = (u & 0xFFFF).astype(jnp.uint16)
+            ct, ok, extra = _encode_scheduled(plan, hi, tc.codebook,
+                                              r.n_elements, r.cap,
+                                              scheduled=scheduled)
+            if scheduled and not bool(ok):
+                # an overflowed hi half means the WHOLE fp32 leaf ships raw
+                raw[key] = leaf
+                if stats is not None:
+                    stats.leaf_wire_bytes[key] = r.raw_bytes
+                _record_unit(stats, key, False, extra)
+            else:
+                comp[key + "#hi"] = ct
+                raw[key + "#lo"] = lo
+                if stats is not None:
+                    stats.leaf_wire_bytes[key] = float(be.wire_bytes(ct))
+                    stats.fp32_lo_wire_bytes += 2.0 * r.n_elements
+                _record_unit(stats, key, True, extra)
+        elif r.route == "fp8":
+            ct, ok, extra = _encode_scheduled(plan, leaf, plan.fp8_codebook,
+                                              r.n_elements, r.cap,
+                                              scheduled=scheduled)
+            if scheduled and not bool(ok):
+                raw[key] = leaf
+                if stats is not None:
+                    stats.fp8_wire_bytes += r.raw_bytes
+                _record_unit(stats, key, False, extra)
+            else:
+                comp[key] = ct
+                if stats is not None:
+                    stats.fp8_wire_bytes += float(be.wire_bytes(ct))
+                _record_unit(stats, key, True, extra)
+        else:
+            raw[key] = leaf
+            if stats is not None:
+                stats.raw_passthrough_bytes += r.raw_bytes
+    return comp, raw
+
+
+def decode_leaves(comp: Dict, raw: Dict, structure, backend: str = "xla"):
+    """Inverse of :func:`encode_leaves` against the original pytree structure.
+    Per-object backend dispatch (:func:`_backend_for`) tolerates a
+    ``backend=`` argument that doesn't match what produced ``comp``."""
+    be = get_backend(backend)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(structure)
+    leaves = []
+    for path, leaf in flat:
+        key = leaf_key(path)
+        if key in comp:
+            ct = comp[key]
+            leaves.append(jnp.asarray(
+                _backend_for(ct, be).decode(ct)).reshape(leaf.shape))
+        elif key + "#hi" in comp:  # fp32 hi/lo split
+            ct = comp[key + "#hi"]
+            hi = jnp.asarray(
+                _backend_for(ct, be).decode(ct)).reshape(leaf.shape)
+            lo = raw[key + "#lo"]
+            u = (hi.astype(jnp.uint32) << 16) | lo.astype(jnp.uint32)
+            leaves.append(jax.lax.bitcast_convert_type(u, jnp.float32))
+        else:
+            leaves.append(raw[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+
+class TransferSession:
+    """Run a :class:`TransferPlan` repeatedly: ``send``/``recv`` or the fused
+    ``transfer``.  Accumulates ``calls``/``total_wire_bytes``; per-call
+    accounting is in ``last_stats`` (None on the mesh path, whose wire bytes
+    are read from the lowered HLO — see analysis/roofline.py)."""
+
+    def __init__(self, plan: TransferPlan):
+        self.plan = plan
+        self.last_stats: Optional[TransferStats] = None
+        self.calls = 0
+        self.total_wire_bytes = 0.0
+        self._staged = None   # in-flight payload between send() and recv()
+        self._mesh_fn = self._build_mesh_fn() if plan.mesh is not None else None
+
+    # -- public API ----------------------------------------------------------
+    def send(self, cache, check: bool = True) -> None:
+        """Prefill-side half: encode every routed leaf and put the payload on
+        the (simulated or collective) wire.  Call ``recv`` to complete.
+        ``check=False`` skips the structure validation for callers that
+        already ran ``plan.matches`` themselves (one pytree walk saved per
+        call on the hot path)."""
+        if self._staged is not None:
+            raise RuntimeError("send() called twice without recv()")
+        if check:
+            self._check_structure(cache)
+        if self.plan.mesh is not None:
+            self._staged = ("mesh", cache)
+        elif self.plan.granularity == "chunked":
+            self._staged = ("chunked", self._send_chunked(cache))
+        else:
+            self._staged = ("tensor", self._send_tensor(cache))
+
+    def recv(self, select_dst: bool = True):
+        """Decode-side half: returns the reassembled cache pytree."""
+        if self._staged is None:
+            raise RuntimeError("recv() called before send()")
+        kind, payload = self._staged
+        self._staged = None
+        if kind == "mesh":
+            out = self._run_mesh(payload, select_dst=select_dst)
+        elif kind == "chunked":
+            out = self._recv_chunked(payload)
+        else:
+            out = self._recv_tensor(payload)
+        self._account()
+        return out
+
+    def transfer(self, cache, select_dst: bool = True, check: bool = True):
+        """Fused send + recv.  The local chunked path interleaves the stages
+        on the explicit ``ChunkSchedule`` (encode t / ship t-1 / decode t-2),
+        exactly the ordering deployment wall-clock overlaps; the result is
+        bit-identical to split send()+recv()."""
+        if self.plan.mesh is None and self.plan.granularity == "chunked":
+            if self._staged is not None:
+                raise RuntimeError("transfer() called with a send() pending")
+            if check:
+                self._check_structure(cache)
+            out = self._transfer_chunked_interleaved(cache)
+            self._account()
+            return out
+        self.send(cache, check=check)
+        return self.recv(select_dst=select_dst)
+
+    def lower_hlo(self, cache) -> str:
+        """Post-SPMD HLO of the mesh program on ``cache``: the
+        collective-permute operand sizes are the actual wire bytes."""
+        if self._mesh_fn is None:
+            raise ValueError("lower_hlo is only meaningful for mesh plans")
+        leaves = jax.tree_util.tree_leaves(cache)
+        return jax.jit(self._mesh_fn).lower(*leaves).compile().as_text()
+
+    # -- internals -----------------------------------------------------------
+    def _check_structure(self, cache) -> None:
+        if not self.plan.matches(cache):
+            raise ValueError(
+                "cache structure does not match this TransferPlan; rebuild "
+                "the plan for the new structure (TransferPlan.build)")
+
+    def _account(self) -> None:
+        self.calls += 1
+        if self.last_stats is not None:
+            self.total_wire_bytes += self.last_stats.wire_bytes
+
+    # -- local / tensor ------------------------------------------------------
+    def _send_tensor(self, cache):
+        stats = TransferStats(chunk_wire_bytes=[], chunk_ok=[],
+                              raw_passthrough_bytes=0.0, n_elements=0)
+        comp, raw = encode_leaves(self.plan, cache, scheduled=True,
+                                  stats=stats)
+        self.last_stats = stats
+        return comp, raw, cache
+
+    def _recv_tensor(self, payload):
+        comp, raw, structure = payload
+        return decode_leaves(comp, raw, structure,
+                             backend=self.plan.tc.backend)
+
+    # -- local / chunked -----------------------------------------------------
+    def _encode_chunk(self, stream, i: int):
+        """Encode segment ``i`` at base capacity (schedule step 0)."""
+        seg = self.plan.segments[i]
+        tc = self.plan.tc
+        return self.plan.backend.encode(
+            stream[seg.start:seg.stop], tc.codebook, chunk=tc.chunk,
+            cap=seg.cap, layout=tc.layout)
+
+    def _ship_chunk(self, stream, i: int, ct, stats: TransferStats):
+        """The wire hop for chunk ``i``: walk the remaining capacity schedule
+        on overflow, then raw fallback.  Returns the in-flight payload
+        (compressed object, or None when the chunk ships its raw bits)."""
+        plan, tc = self.plan, self.plan.tc
+        seg = plan.segments[i]
+        be = plan.backend
+        ok = bool(be.ok(ct))
+        extra = 0
+        if not ok:
+            for rbe, layout, cap in plan.schedule_for(seg.n_elements,
+                                                      seg.cap)[1:]:
+                extra += 1
+                ct2 = rbe.encode(stream[seg.start:seg.stop], tc.codebook,
+                                 chunk=tc.chunk, cap=cap, layout=layout)
+                if bool(rbe.ok(ct2)):
+                    ct, ok = ct2, True
+                    break
+        stats.chunk_retried[i] = extra > 0
+        stats.chunk_retry_steps[i] = extra
+        stats.chunk_ok[i] = ok
+        stats.chunk_wire_bytes[i] = (float(be.wire_bytes(ct)) if ok
+                                     else seg.raw_bytes)
+        return ct if ok else None
+
+    def _decode_chunk(self, stream, i: int, payload):
+        """Receiver side: straight to the shipped bit stream (``decode_bits``
+        — the fused pallas decode emits these bits from its single kernel)."""
+        seg = self.plan.segments[i]
+        if payload is None:      # raw fallback: the original bits shipped
+            return stream[seg.start:seg.stop]
+        be = _backend_for(payload, self.plan.backend)
+        return jnp.asarray(be.decode_bits(payload)).reshape(-1)
+
+    def _chunked_sidecars(self, cache, stats: TransferStats):
+        """Everything outside the pipelined stream: fold the stream, encode
+        fp8 sidecar leaves, count lo halves + raw passthrough."""
+        plan = self.plan
+        stream, lo, fp8, raw = plan.fold_stream(cache)
+        fp8_payload: Dict[str, object] = {}
+        for r in plan.routes:
+            if r.route == "fp32_hilo":
+                stats.fp32_lo_wire_bytes += 2.0 * r.n_elements
+            elif r.route == "fp8":
+                ct, ok, extra = _encode_scheduled(
+                    plan, fp8[r.key], plan.fp8_codebook, r.n_elements, r.cap,
+                    scheduled=True)
+                _record_unit(stats, r.key, bool(ok), extra)
+                stats.fp8_wire_bytes += (float(plan.backend.wire_bytes(ct))
+                                         if ok else r.raw_bytes)
+                fp8_payload[r.key] = ct if ok else fp8[r.key]
+            elif r.route == "raw":
+                stats.raw_passthrough_bytes += r.raw_bytes
+        return stream, lo, fp8_payload, raw
+
+    def _new_chunked_stats(self) -> TransferStats:
+        n = self.plan.n_chunks
+        return TransferStats(
+            chunk_wire_bytes=[0.0] * n, chunk_ok=[True] * n,
+            raw_passthrough_bytes=0.0, n_elements=self.plan.stream_len,
+            chunk_retried=[False] * n, chunk_retry_steps=[0] * n)
+
+    def _send_chunked(self, cache):
+        stats = self._new_chunked_stats()
+        stream, lo, fp8_payload, raw = self._chunked_sidecars(cache, stats)
+        in_flight = [self._ship_chunk(stream, i, self._encode_chunk(stream, i),
+                                      stats)
+                     for i in range(self.plan.n_chunks)]
+        self.last_stats = stats
+        return stream, in_flight, lo, fp8_payload, raw
+
+    def _recv_chunked(self, payload):
+        stream, in_flight, lo, fp8_payload, raw = payload
+        decoded = [self._decode_chunk(stream, i, p)
+                   for i, p in enumerate(in_flight)]
+        return self._reassemble(decoded, lo, fp8_payload, raw)
+
+    def _reassemble(self, decoded_bits: List[jax.Array], lo, fp8_payload, raw):
+        plan = self.plan
+        bits_out = (jnp.concatenate(decoded_bits) if len(decoded_bits) > 1
+                    else decoded_bits[0])
+        fp8_dec = {}
+        for r in plan.routes:
+            if r.route == "fp8":
+                p = fp8_payload[r.key]
+                if isinstance(p, jax.Array):   # raw fallback leaf
+                    fp8_dec[r.key] = p
+                else:
+                    fp8_dec[r.key] = _backend_for(p, plan.backend).decode(p)
+        return plan.unfold_stream(bits_out, lo, fp8_dec, raw)
+
+    def _transfer_chunked_interleaved(self, cache):
+        """The fused chunked path on the explicit overlap schedule: at step t
+        encode chunk t, ship chunk t-1, decode chunk t-2."""
+        stats = self._new_chunked_stats()
+        stream, lo, fp8_payload, raw = self._chunked_sidecars(cache, stats)
+        n = self.plan.n_chunks
+        encoded: Dict[int, object] = {}
+        in_flight: Dict[int, object] = {}
+        decoded: Dict[int, jax.Array] = {}
+        for enc_i, xfer_i, dec_i in ChunkSchedule(n).stages():
+            if 0 <= enc_i < n:
+                encoded[enc_i] = self._encode_chunk(stream, enc_i)
+            if 0 <= xfer_i < n:
+                in_flight[xfer_i] = self._ship_chunk(
+                    stream, xfer_i, encoded.pop(xfer_i), stats)
+            if 0 <= dec_i < n:
+                decoded[dec_i] = self._decode_chunk(
+                    stream, dec_i, in_flight.pop(dec_i))
+        self.last_stats = stats
+        return self._reassemble([decoded[i] for i in range(n)], lo,
+                                fp8_payload, raw)
+
+    # -- mesh ----------------------------------------------------------------
+    def _build_mesh_fn(self):
+        plan = self.plan
+        tc = plan.tc
+        treedef = plan.treedef
+
+        def body(*leaves_flat):
+            local = jax.tree_util.tree_unflatten(treedef, leaves_flat)
+            # a plan over the LOCAL shard structure: shapes inside shard_map
+            # are the per-shard views, so segmentation/routing re-resolves
+            # here (trace-time only — once per compilation, not per call)
+            lp = TransferPlan.build(local, tc, granularity=plan.granularity)
+            perm = lambda x: _permute_leaf(x, "pod", plan.src_pod,
+                                           plan.dst_pod)
+            if lp.granularity == "chunked":
+                out = self._mesh_chunked_body(lp, local, perm)
+            else:
+                comp, raw = encode_leaves(lp, local, scheduled=False)
+                moved_comp = jax.tree.map(perm, comp)
+                moved_raw = jax.tree.map(perm, raw)
+                out = decode_leaves(moved_comp, moved_raw, local,
+                                    backend=tc.backend)
+            # fresh leading 'pod' axis: index dst_pod holds the decoded
+            # cache, index src_pod whatever the non-receiving pod decodes
+            # from its zero-filled streams
+            return tuple(x[None] for x in jax.tree_util.tree_leaves(out))
+
+        from jax.sharding import PartitionSpec as P
+        out_specs = tuple(P("pod", *s) for s in plan.in_specs)
+        return shard_map(body, mesh=plan.mesh, in_specs=plan.in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+    def _mesh_chunked_body(self, lp: TransferPlan, local, perm):
+        """Per-chunk collective with double-buffering: at any schedule step
+        at most two chunks are live between stages (t-1 permuting, t-2
+        decoding) while chunk t encodes."""
+        tc = lp.tc
+        be = lp.backend
+        stream, lo, fp8, raw = lp.fold_stream(local)
+        n = lp.n_chunks
+        encoded: Dict[int, object] = {}
+        in_flight: Dict[int, object] = {}
+        decoded: Dict[int, jax.Array] = {}
+        for enc_i, xfer_i, dec_i in ChunkSchedule(n).stages():
+            if 0 <= enc_i < n:
+                seg = lp.segments[enc_i]
+                encoded[enc_i] = be.encode(
+                    stream[seg.start:seg.stop], tc.codebook,
+                    chunk=tc.chunk, cap=seg.cap, layout=tc.layout)
+            if 0 <= xfer_i < n:
+                in_flight[xfer_i] = jax.tree.map(perm, encoded.pop(xfer_i))
+            if 0 <= dec_i < n:
+                decoded[dec_i] = jnp.asarray(
+                    be.decode_bits(in_flight.pop(dec_i))).reshape(-1)
+        bits_out = (jnp.concatenate([decoded[i] for i in range(n)])
+                    if n > 1 else decoded[0] if n else
+                    jnp.zeros((0,), jnp.uint16))
+        fp8_dec = {}
+        for r in lp.routes:
+            if r.route == "fp8":
+                ct = be.encode(fp8[r.key], lp.fp8_codebook, chunk=tc.chunk,
+                               cap=r.cap, layout=tc.layout)
+                fp8_dec[r.key] = be.decode(jax.tree.map(perm, ct))
+        lo_m = {k: perm(v) for k, v in lo.items()}
+        raw_m = {k: perm(v) for k, v in raw.items()}
+        return lp.unfold_stream(bits_out, lo_m, fp8_dec, raw_m)
+
+    def _run_mesh(self, cache, select_dst: bool = True):
+        plan = self.plan
+        leaves = jax.tree_util.tree_leaves(cache)
+        moved = self._mesh_fn(*leaves)
+        self.last_stats = None   # mesh wire bytes live in the HLO (roofline)
+        if select_dst:
+            # convenience view for eager callers (tests/examples).  Inside a
+            # jit this slice forces GSPMD to bounce the DECODED cache back
+            # across the pod axis — production consumers keep the cache
+            # pod-resident: select_dst=False and read index dst_pod locally.
+            moved = tuple(x[plan.dst_pod] for x in moved)
+        return jax.tree_util.tree_unflatten(plan.treedef, moved)

@@ -1,152 +1,86 @@
-"""KV-cache transfer engine with SplitZip compression (the paper's setting).
+"""KV-cache transfer (the paper's setting) — DEPRECATION SHIMS + accounting.
 
-The PD boundary on a TPU mesh: prefill workers live on pod 0, decode workers
-on pod 1 of the (pod, data, model) mesh.  ``transfer_compressed`` maps the
-in-graph SplitZip codec over every bf16 cache leaf, moves the *compressed
-streams* across the pod axis with ``lax.ppermute`` inside ``shard_map``, and
-decodes on the receiving pod.  fp32 recurrent states (SSM/RG-LRU) ship raw
-(see DESIGN.md; a beyond-paper fp32 codec variant is tracked separately).
+The transfer API is now a compile-once/run-many pair:
 
-Losslessness is unconditional: each tensor's ``ok`` flag (escape-capacity
-overflow) selects compressed vs raw payload per tensor, so adversarial
-activation distributions degrade to raw-speed transfer, never to corruption.
+    plan = TransferPlan.build(cache_structure, tc, mesh=...)  # policy, ONCE
+    sess = plan.session()
+    out  = sess.transfer(cache)                                # execute, MANY
 
-Codec selection is pluggable: every encode/decode in this module goes through
-the :mod:`repro.core.backend` registry (``TransferConfig.backend`` — ``auto``,
-``xla``, ``pallas``, or ``wire``), never through a codec module directly.
-On the chunked path decompression uses ``decode_bits`` — the fused Pallas
-decode kernel emits exactly the bit stream the pipe ships, so no
-reshape/bitcast tail runs between decode and reassembly.  Transfer
-granularity is pluggable too: ``TransferConfig.n_chunks > 1`` switches from
-whole-tensor encode→ship→decode to the chunked pipelined engine
-(``transfer_cache_chunked``), which drives ``ChunkSchedule`` so encode of
-chunk *t* overlaps transfer of *t−1* and decode of *t−2*, with a per-chunk
-raw fallback preserving unconditional losslessness.
+:class:`repro.serving.plan.TransferPlan` resolves, per leaf, the codec route
+(bf16 -> splitzip backend; fp32 -> hi/lo split folded into the chunked
+stream; float8 -> e5m2 repack; else raw), the chunk segmentation (codec-
+chunk-aligned, precomputed), the capacity policy (geometric retry schedule
+``cap -> 2cap -> 4cap -> layout='global'``), and the execution target (local
+pipelined loop vs per-chunk ``lax.ppermute`` with double-buffering inside
+``shard_map``).  :class:`repro.serving.session.TransferSession` executes it:
+``send``/``recv``/``transfer``.  All serving consumers
+(``DisaggregatedEngine``, launch/serve.py, benchmarks, examples) go through
+the session — CI greps that ``src/repro/serving`` and ``src/repro/launch``
+never call the free functions below directly.
 
-Byte accounting for the roofline reads the ppermute operand sizes straight
-from the lowered HLO (analysis/roofline.py); the analytic model here
-(`transfer_report`) mirrors the paper's Fig. 3/4 accounting.
+This module keeps those historical entry points — ``compress_cache`` /
+``decompress_cache`` (whole-tensor), ``transfer_cache_chunked`` (local
+pipelined), ``transfer_cache_cross_pod`` (mesh) — as THIN SHIMS that build a
+one-shot plan and run it, so out-of-tree callers keep working; new code
+should hold a plan and reuse its session.  The analytic accounting
+(``transfer_report``, ``compressed_wire_bytes``, ``raw_wire_bytes``) also
+lives here.
+
+Losslessness is unconditional on every path: escape-capacity overflow
+(``ok == False``) walks the plan's capacity schedule and then falls back to
+the raw payload per unit (tensor or chunk), so adversarial activation
+distributions degrade to raw-speed transfer, never to corruption.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compat import shard_map
-from repro.core import codec as C
-from repro.core.backend import CodecBackend, get_backend
-from repro.core.codebook import Codebook
-from repro.core.pipeline import (ChunkSchedule, CodecProfile,
-                                 additive_transfer_time, native_transfer_time,
-                                 pipelined_transfer_time)
+from repro.core.backend import get_backend
+from repro.core.pipeline import CodecProfile, flowshop_makespan
+# re-exports: the plan/session API is the canonical surface; these names
+# stay importable from repro.serving.transfer for existing callers
+from repro.serving.plan import (ChunkedTransferStats, TransferConfig,
+                                TransferPlan, TransferStats, leaf_key)
+from repro.serving.session import (TransferSession, _backend_for,
+                                   _permute_leaf, decode_leaves,
+                                   encode_leaves)
 
-
-@dataclasses.dataclass(frozen=True)
-class TransferConfig:
-    codebook: Codebook
-    chunk: int = C.DEFAULT_CHUNK
-    cap: int = C.DEFAULT_CAP
-    enabled: bool = True          # False => native raw-bytes baseline
-    compress_fp32: bool = False   # beyond-paper fp32-state codec toggle
-    layout: str = "chunked"       # 'chunked' (paper) | 'global' (beyond-paper)
-    global_budget: float = 0.01   # escape-capacity budget for layout='global'
-    backend: str = "xla"          # codec backend registry key (core/backend.py)
-    n_chunks: int = 1             # >1 => chunked pipelined transfer engine
-
-    def get_backend(self) -> CodecBackend:
-        return get_backend(self.backend)
-
-
-def leaf_key(path) -> str:
-    """Canonical pytree-path -> string key.  Compression, wire accounting,
-    segmentation, and reassembly all index by this; it must stay one
-    definition or decompression silently misroutes leaves."""
-    return "/".join(str(getattr(k, "key", k)) for k in path)
-
-
-def _backend_for(comp_obj, be: CodecBackend) -> CodecBackend:
-    """Resolve the backend that can actually decode ``comp_obj``.
-
-    Guards the split compress/decompress API: wire payloads decode only with
-    the wire backend, in-graph CompressedTensors only with a jittable one
-    (xla and pallas share the stream layout, so either decodes either).  A
-    mismatched ``backend=`` argument is corrected instead of crashing with
-    an opaque AttributeError."""
-    from repro.core.backend import WireCompressed
-    if isinstance(comp_obj, WireCompressed):
-        return be if be.name == "wire" else get_backend("wire")
-    return be if be.jittable else get_backend("xla")
+__all__ = [
+    "TransferConfig", "TransferPlan", "TransferSession", "TransferStats",
+    "ChunkedTransferStats", "leaf_key", "compress_cache", "decompress_cache",
+    "compressed_wire_bytes", "raw_wire_bytes", "split_cache_segments",
+    "transfer_cache_chunked", "transfer_cache_cross_pod", "TransferReport",
+    "transfer_report",
+]
 
 
 # ---------------------------------------------------------------------------
-# single-process codec application over a cache pytree
+# whole-tensor shims (deprecated: hold a TransferPlan/TransferSession instead)
 # ---------------------------------------------------------------------------
 
 def compress_cache(cache: Dict, tc: TransferConfig) -> Tuple[Dict, Dict]:
-    """Returns (compressed pytree, passthrough pytree of non-bf16 leaves).
+    """DEPRECATED shim: one-shot plan + per-leaf encode (no retry schedule).
 
-    Each bf16 leaf becomes a CompressedTensor (pytree, jit-transparent).
-
-    ``compress_fp32`` (beyond-paper): an fp32 leaf splits into hi/lo u16
-    halves; the hi half has the BF16 bit layout (sign + exp8 + mantissa7),
-    so the SAME calibrated exponent codebook compresses it, while the lo
-    mantissa half ships raw — lossless fp32 at ratio 32/(16/rho+16) ≈ 1.14x.
-    This is what makes SplitZip useful for fp32 recurrent state transfer
-    (SSM/RG-LRU caches), where the paper's bf16-only codec gives zero."""
-    be = tc.get_backend()
-    comp, raw = {}, {}
-    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
-    for path, leaf in flat:
-        key = leaf_key(path)
-        def _cap(n):
-            cap = tc.cap
-            if tc.layout == "global" and cap == C.DEFAULT_CAP:
-                cap = C.default_global_cap(n, tc.global_budget)
-            return cap
-        if leaf.dtype == jnp.bfloat16 and tc.enabled:
-            comp[key] = be.encode(leaf, tc.codebook, chunk=tc.chunk,
-                                  cap=_cap(leaf.size), layout=tc.layout)
-        elif leaf.dtype == jnp.float32 and tc.enabled and tc.compress_fp32:
-            u = jax.lax.bitcast_convert_type(leaf, jnp.uint32)
-            hi = (u >> 16).astype(jnp.uint16)   # bf16-layout bits
-            lo = (u & 0xFFFF).astype(jnp.uint16)
-            comp[key + "#hi"] = be.encode(hi, tc.codebook, chunk=tc.chunk,
-                                          cap=_cap(hi.size), layout=tc.layout)
-            raw[key + "#lo"] = lo
-        else:
-            raw[key] = leaf
-    return comp, raw
+    Returns (compressed pytree, passthrough pytree).  Each routed leaf
+    becomes a CompressedTensor (bf16 via the plan's splitzip route; fp32
+    with ``compress_fp32`` as ``#hi``/``#lo`` halves; float8 via the e5m2
+    repack route).  New code: ``TransferPlan.build(...).session()``."""
+    plan = TransferPlan.build(cache, tc)
+    return encode_leaves(plan, cache, scheduled=False)
 
 
 def decompress_cache(comp: Dict, raw: Dict, structure: Dict,
                      backend: str = "xla") -> Dict:
-    """Inverse of compress_cache against the original pytree structure.
-    Per-object backend dispatch (``_backend_for``) tolerates a ``backend=``
-    argument that doesn't match what actually produced ``comp``."""
-    be = get_backend(backend)
-    flat, treedef = jax.tree_util.tree_flatten_with_path(structure)
-    leaves = []
-    for path, leaf in flat:
-        key = leaf_key(path)
-        if key in comp:
-            ct = comp[key]
-            leaves.append(_backend_for(ct, be).decode(ct).reshape(leaf.shape))
-        elif key + "#hi" in comp:  # fp32 hi/lo split
-            ct = comp[key + "#hi"]
-            hi = _backend_for(ct, be).decode(ct).reshape(leaf.shape)
-            lo = raw[key + "#lo"]
-            u = (hi.astype(jnp.uint32) << 16) | lo.astype(jnp.uint32)
-            leaves.append(jax.lax.bitcast_convert_type(u, jnp.float32))
-        else:
-            leaves.append(raw[key])
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+    """DEPRECATED shim: inverse of :func:`compress_cache` against the
+    original pytree structure (see :func:`repro.serving.session.decode_leaves`
+    for the per-object backend dispatch)."""
+    return decode_leaves(comp, raw, structure, backend=backend)
 
 
 def compressed_wire_bytes(comp: Dict, raw: Dict,
@@ -171,148 +105,15 @@ def raw_wire_bytes(cache: Dict) -> float:
 
 
 # ---------------------------------------------------------------------------
-# cross-pod transfer (shard_map + ppermute over the 'pod' axis)
+# chunked / cross-pod shims
 # ---------------------------------------------------------------------------
-
-_WIRE_INT = {2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
-
-
-def _permute_leaf(x: jax.Array, axis_name: str, src: int, dst: int) -> jax.Array:
-    """ppermute with the payload pinned to its exact bit width.
-
-    XLA CPU (and some TPU paths) upcast bf16 collectives to f32 — doubling the
-    wire bytes and silently defeating the codec.  Bitcasting to a same-width
-    integer type before the collective guarantees the HLO moves exactly the
-    bytes we account for; the roundtrip is a bitcast, hence lossless."""
-    if jnp.issubdtype(x.dtype, jnp.floating) and x.dtype.itemsize in _WIRE_INT:
-        w = _WIRE_INT[x.dtype.itemsize]
-        y = jax.lax.ppermute(jax.lax.bitcast_convert_type(x, w), axis_name,
-                             perm=[(src, dst)])
-        return jax.lax.bitcast_convert_type(y, x.dtype)
-    return jax.lax.ppermute(x, axis_name, perm=[(src, dst)])
-
-
-def transfer_cache_cross_pod(
-    cache: Dict,
-    mesh: Mesh,
-    tc: TransferConfig,
-    src_pod: int = 0,
-    dst_pod: int = 1,
-    return_hlo: bool = False,
-    specs=None,
-    select_dst: bool = True,
-):
-    """Move a cache pytree from src_pod to dst_pod, compressed on the wire.
-
-    Inside shard_map over the 'pod' axis: encode locally on the source pod,
-    ppermute only the *compressed streams* (the collective bytes visible in
-    HLO are the compressed payload), decode on the destination pod.  The
-    data/model sharding of each leaf is preserved end-to-end.
-    """
-    if "pod" not in mesh.shape:
-        raise ValueError("transfer_cache_cross_pod needs a 'pod' mesh axis")
-    if not get_backend(tc.backend).jittable:
-        raise ValueError(
-            f"backend {tc.backend!r} is host-side and cannot run inside "
-            "shard_map; use a jittable backend ('xla', 'pallas')")
-    n_pod = mesh.shape["pod"]
-
-    def leaf_spec(x):
-        # cache leaves: (L, B, S, ...) — batch over data, replicated over
-        # pod/model (the host-staged value; prefill pod is the logical owner)
-        spec = [None] * x.ndim
-        if x.ndim >= 2 and x.shape[1] % mesh.shape["data"] == 0:
-            spec[1] = "data"
-        return P(*spec)
-
-    # per-leaf inner function: runs per pod-shard with pod axis bound.
-    # Output gets a fresh leading 'pod' axis so each pod's post-transfer view
-    # is explicit: index dst_pod holds the decoded cache, index src_pod holds
-    # whatever the non-receiving pod decodes from its zero-filled streams.
-    def body(*leaves_flat):
-        treedef = jax.tree_util.tree_structure(cache)
-        local = jax.tree_util.tree_unflatten(treedef, leaves_flat)
-        comp, raw = compress_cache(local, tc)
-        moved_comp = jax.tree.map(
-            lambda x: _permute_leaf(x, "pod", src_pod, dst_pod), comp)
-        moved_raw = jax.tree.map(
-            lambda x: _permute_leaf(x, "pod", src_pod, dst_pod), raw)
-        out = decompress_cache(moved_comp, moved_raw, local, backend=tc.backend)
-        return tuple(x[None] for x in jax.tree.leaves(out))
-
-    leaves = jax.tree.leaves(cache)
-    if specs is not None:  # caller-provided (e.g. the sharding policy's
-        in_specs = tuple(jax.tree.leaves(specs,
-                                         is_leaf=lambda x: isinstance(x, P)))
-    else:
-        in_specs = tuple(leaf_spec(x) for x in leaves)
-    out_specs = tuple(P("pod", *s) for s in in_specs)
-    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_vma=False)
-    moved = fn(*leaves)
-    if select_dst:
-        # convenience view for eager callers (tests/examples).  Inside a jit
-        # this slice forces GSPMD to bounce the DECODED cache back across the
-        # pod axis — production consumers (and the dry-run) keep the cache
-        # pod-resident: pass select_dst=False and read index dst_pod locally.
-        moved = tuple(x[dst_pod] for x in moved)
-    out = jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(cache), moved)
-    if return_hlo:
-        # post-SPMD HLO: the collective-permute operand sizes here are the
-        # actual wire bytes (compressed when tc.enabled)
-        hlo = jax.jit(fn).lower(*leaves).compile().as_text()
-        return out, hlo
-    return out
-
-
-# ---------------------------------------------------------------------------
-# chunked pipelined transfer engine (paper Appendix A made concrete)
-#
-# The whole-tensor path above is additive: encode the entire cache, ship it,
-# decode it.  The paper's headline claim is that the codec keeps up with KV
-# production, so encode/transfer/decode can be OVERLAPPED: split the cache
-# into n_chunks contiguous byte-range segments and drive them through
-# ChunkSchedule — at step t the engine encodes chunk t, transfers chunk t-1,
-# decodes chunk t-2.  Locally the stages execute in schedule order (the
-# overlap is a wall-clock property of the deployment link, modeled by
-# pipelined_transfer_time); what this engine makes real is the per-chunk
-# data path: segmentation, per-chunk encode/ship/decode, per-chunk ok/raw
-# fallback, per-chunk wire accounting, and bit-exact reassembly.
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class ChunkedTransferStats:
-    """Per-chunk accounting emitted by ``transfer_cache_chunked``."""
-
-    chunk_wire_bytes: List[float]   # wire bytes actually shipped per chunk
-    chunk_ok: List[bool]            # escape capacity held for this chunk?
-    raw_passthrough_bytes: float    # non-bf16 leaves shipped outside the pipe
-    n_elements: int                 # bf16 elements routed through the pipe
-    # chunks whose first encode overflowed and were re-encoded once at
-    # doubled capacity (adaptive capacity; chunk_ok reflects the retry result)
-    chunk_retried: List[bool] = dataclasses.field(default_factory=list)
-
-    @property
-    def wire_bytes(self) -> float:
-        return sum(self.chunk_wire_bytes) + self.raw_passthrough_bytes
-
-    @property
-    def all_ok(self) -> bool:
-        return all(self.chunk_ok)
-
-    @property
-    def n_retries(self) -> int:
-        return sum(self.chunk_retried)
-
 
 def split_cache_segments(cache: Dict, n_chunks: int, align: int
                          ) -> Tuple[List[jax.Array], List[Tuple[str, tuple]], Dict]:
-    """Flatten every bf16 leaf into one u16 bit stream and cut it into at
-    most ``n_chunks`` contiguous segments, each aligned to ``align`` elements
-    (the codec chunk) except the last.  Returns (segments, leaf metadata for
-    reassembly, raw passthrough leaves)."""
+    """DEPRECATED shim: flatten every bf16 leaf into one u16 bit stream and
+    cut it into at most ``n_chunks`` ``align``-aligned segments.  The plan
+    now owns segmentation (``TransferPlan.segments`` + ``fold_stream``, which
+    also folds fp32 hi halves); this keeps the historical bf16-only view."""
     bits_parts, metas, raw = [], [], {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
         key = leaf_key(path)
@@ -332,111 +133,57 @@ def split_cache_segments(cache: Dict, n_chunks: int, align: int
     return segments, metas, raw
 
 
-def _reassemble_cache(bits_out: jax.Array, metas, raw: Dict,
-                      structure: Dict) -> Dict:
-    """Inverse of split_cache_segments: slice the decoded bit stream back
-    into leaves and restore the original pytree structure."""
-    decoded, off = {}, 0
-    for key, shape in metas:
-        n = int(np.prod(shape)) if shape else 1
-        decoded[key] = jax.lax.bitcast_convert_type(
-            bits_out[off:off + n].reshape(shape), jnp.bfloat16)
-        off += n
-    flat, treedef = jax.tree_util.tree_flatten_with_path(structure)
-    leaves = []
-    for path, leaf in flat:
-        key = leaf_key(path)
-        leaves.append(decoded[key] if key in decoded else raw[key])
-    return jax.tree_util.tree_unflatten(treedef, leaves)
-
-
 def transfer_cache_chunked(cache: Dict, tc: TransferConfig
-                           ) -> Tuple[Dict, ChunkedTransferStats]:
-    """Chunked pipelined compress → ship → decompress of a cache pytree.
+                           ) -> Tuple[Dict, TransferStats]:
+    """DEPRECATED shim: one-shot plan through the local pipelined engine.
 
-    Drives ``ChunkSchedule(n).stages()``: each schedule step encodes one
-    chunk, "transfers" the previous one (local mode: accounting + payload
-    hand-off; the mesh path ships these same per-chunk streams), and decodes
-    the one before that — straight to the shipped bit stream via
-    ``decode_bits`` (the fused pallas backend emits these bits from its
-    single decode kernel).  A chunk whose escape capacity overflows is
-    re-encoded ONCE at doubled capacity (adaptive capacity — recovers
-    heavy-tailed chunks; recorded in ``ChunkedTransferStats.chunk_retried``)
-    and only then falls back to shipping its raw bits, so the reassembled
-    cache is bit-identical to the input unconditionally.
-    """
-    be = tc.get_backend()
-    segments, metas, raw = split_cache_segments(cache, tc.n_chunks, tc.chunk)
-    raw_pass = float(sum(x.size * x.dtype.itemsize for x in raw.values()))
-    if not segments or not tc.enabled:
-        # nothing to compress (or baseline mode): every chunk ships raw bits
-        stats = ChunkedTransferStats(
+    Equivalent to ``TransferPlan.build(cache, tc).session().transfer(cache)``
+    — per-chunk encode/ship/decode on the ``ChunkSchedule`` overlap, the
+    geometric capacity schedule on overflow, raw fallback after exhaustion,
+    and bit-exact reassembly.  Returns ``(cache, stats)``."""
+    sess = TransferPlan.build(cache, tc, granularity="chunked").session()
+    out = sess.transfer(cache)
+    stats = sess.last_stats
+    if stats is not None and not stats.chunk_wire_bytes and tc.n_chunks > 1:
+        # structure with nothing to fold (or compression disabled): report
+        # the historical raw-chunk accounting for the bf16 stream
+        segments, _, _ = split_cache_segments(cache, tc.n_chunks, tc.chunk)
+        stats = dataclasses.replace(
+            stats,
             chunk_wire_bytes=[float(s.shape[0] * 2) for s in segments],
             chunk_ok=[True] * len(segments),
-            raw_passthrough_bytes=raw_pass,
-            n_elements=int(sum(s.shape[0] for s in segments)),
-            chunk_retried=[False] * len(segments))
-        return cache, stats
-
-    def _cap(n):
-        cap = tc.cap
-        if tc.layout == "global" and cap == C.DEFAULT_CAP:
-            cap = C.default_global_cap(n, tc.global_budget)
-        return cap
-
-    n_seg = len(segments)
-    encoded: Dict[int, object] = {}
-    in_flight: Dict[int, object] = {}
-    decoded_bits: Dict[int, jax.Array] = {}
-    wire_per_chunk: List[float] = [0.0] * n_seg
-    ok_per_chunk: List[bool] = [True] * n_seg
-    retried_per_chunk: List[bool] = [False] * n_seg
-
-    for enc_i, xfer_i, dec_i in ChunkSchedule(n_seg).stages():
-        if 0 <= enc_i < n_seg:
-            encoded[enc_i] = be.encode(
-                segments[enc_i], tc.codebook, chunk=tc.chunk,
-                cap=_cap(segments[enc_i].shape[0]), layout=tc.layout)
-        if 0 <= xfer_i < n_seg:
-            ct = encoded.pop(xfer_i)
-            okx = bool(be.ok(ct))
-            if not okx:
-                # adaptive capacity: one re-encode at doubled cap recovers
-                # the ratio on heavy-tailed chunks before the raw fallback
-                # (for_retry lets a backend swap in a structure that can
-                # actually use the doubled budget, e.g. fused-global pallas)
-                ct2 = be.for_retry(tc.layout).encode(
-                    segments[xfer_i], tc.codebook, chunk=tc.chunk,
-                    cap=2 * _cap(segments[xfer_i].shape[0]), layout=tc.layout)
-                retried_per_chunk[xfer_i] = True
-                if bool(be.ok(ct2)):
-                    ct, okx = ct2, True
-            ok_per_chunk[xfer_i] = okx
-            wire_per_chunk[xfer_i] = (
-                float(be.wire_bytes(ct)) if okx
-                else float(segments[xfer_i].shape[0] * 2))  # raw u16 fallback
-            # the wire hop: compressed streams (or raw bits) leave the
-            # prefill side here; in local mode this is a hand-off
-            in_flight[xfer_i] = ct if okx else None
-        if 0 <= dec_i < n_seg:
-            ct = in_flight.pop(dec_i)
-            if ct is None:  # raw fallback: the original bits were shipped
-                decoded_bits[dec_i] = segments[dec_i]
-            else:
-                # decode straight to the bit stream the pipe ships — the
-                # fused pallas path emits these bits from its single kernel
-                decoded_bits[dec_i] = jnp.asarray(
-                    be.decode_bits(ct)).reshape(-1)
-
-    bits_out = jnp.concatenate([decoded_bits[i] for i in range(n_seg)]) \
-        if n_seg > 1 else decoded_bits[0]
-    out = _reassemble_cache(bits_out, metas, raw, cache)
-    stats = ChunkedTransferStats(
-        chunk_wire_bytes=wire_per_chunk, chunk_ok=ok_per_chunk,
-        raw_passthrough_bytes=raw_pass,
-        n_elements=int(sum(s.shape[0] for s in segments)),
-        chunk_retried=retried_per_chunk)
+            chunk_retried=[False] * len(segments),
+            chunk_retry_steps=[0] * len(segments),
+            raw_passthrough_bytes=stats.raw_passthrough_bytes
+            - float(sum(s.shape[0] * 2 for s in segments)),
+            n_elements=int(sum(s.shape[0] for s in segments)))
     return out, stats
+
+
+def transfer_cache_cross_pod(
+    cache: Dict,
+    mesh: Mesh,
+    tc: TransferConfig,
+    src_pod: int = 0,
+    dst_pod: int = 1,
+    return_hlo: bool = False,
+    specs=None,
+    select_dst: bool = True,
+):
+    """DEPRECATED shim: one-shot mesh plan (shard_map + ppermute over 'pod').
+
+    Equivalent to ``TransferPlan.build(cache, tc, mesh=mesh, specs=specs,
+    src_pod=..., dst_pod=...).session().transfer(cache)``.  ``tc.n_chunks >
+    1`` ships per-chunk streams with double-buffered ppermutes; the result
+    is bit-identical to the whole-tensor collective."""
+    sess = TransferPlan.build(cache, tc, mesh=mesh, specs=specs,
+                              src_pod=src_pod, dst_pod=dst_pod).session()
+    out = sess.transfer(cache, select_dst=select_dst)
+    if return_hlo:
+        # post-SPMD HLO: the collective-permute operand sizes here are the
+        # actual wire bytes (compressed when tc.enabled)
+        return out, sess.lower_hlo(cache)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -463,15 +210,29 @@ class TransferReport:
 
 
 def transfer_report(raw_bytes: float, wire_bytes: float,
-                    profile: CodecProfile, n_chunks: int = 1) -> TransferReport:
+                    profile: CodecProfile, n_chunks: int = 1,
+                    plan: Optional[TransferPlan] = None) -> TransferReport:
     """Analytic accounting from MEASURED wire bytes: additive
     encode + compressed transfer + decode (Fig. 4) when ``n_chunks == 1``,
-    chunked steady-state pipeline (Appendix A: fill + (n-1)·bottleneck +
-    drain) when ``n_chunks > 1`` — matching what the engine actually ran."""
+    chunked steady-state pipeline (Appendix A) when ``n_chunks > 1``.
+
+    With ``plan=`` the pipeline term splits the MEASURED totals across
+    chunks in the plan's ACTUAL segment proportions (short tail chunk
+    included) and runs the flowshop recurrence — still a function of the
+    measured raw/wire bytes, so it stays consistent when the totals
+    accumulate over many engine calls and when raw fallbacks inflate the
+    wire bytes (``plan.estimate_time`` is the single-transfer a-priori
+    estimate instead)."""
     t_enc = raw_bytes / profile.g_enc
     t_dec = raw_bytes / profile.g_dec
     t_xfer = wire_bytes / profile.link_bw
-    if n_chunks > 1:
+    if plan is not None and plan.granularity == "chunked":
+        seg = plan.chunk_raw_bytes()
+        fracs = [s / sum(seg) for s in seg]
+        t_total = flowshop_makespan(
+            [(f * t_enc, f * t_xfer, f * t_dec) for f in fracs]
+        ) + profile.fixed_overhead_s
+    elif n_chunks > 1:
         per = [t / n_chunks for t in (t_enc, t_xfer, t_dec)]
         t_total = sum(per) + (n_chunks - 1) * max(per) + profile.fixed_overhead_s
     else:
