@@ -29,7 +29,7 @@ from repro.core.pipeline import CodecProfile
 from repro.models import model as M
 from repro.serving.engine import DisaggregatedEngine
 from repro.serving.scheduler import (DisaggregatedScheduler, Request,
-                                     SchedulerConfig, summarize)
+                                     summarize)
 
 
 def calibrate_from_model(params, cfg, shape) -> cbm.Codebook:
@@ -92,7 +92,12 @@ def main():
 
     # --- 3) continuous-batching scheduler under a 400GbE profile -------------
     # Codec profile uses the paper's measured H200 numbers; the link is 400GbE
-    # (50 GB/s), the regime Fig. 2 targets.
+    # (50 GB/s), the regime Fig. 2 targets.  The scheduler is plan-aware:
+    # eng_sz hands its already-resolved TransferPlan (the object the session
+    # executes) straight to the admission engine via scheduler_config(), so
+    # the sweep's transfer charges flow through the real routing table;
+    # eng_raw has no plan (compression off), so the scheduler builds all-raw
+    # bucket plans from its TransferConfig — native link cost, same API.
     prof = CodecProfile(g_enc=613.3e9, g_dec=2181.8e9,
                         ratio=float(eng_sz.stats.transfer_ratio), link_bw=50e9,
                         fixed_overhead_s=2e-4)
@@ -110,11 +115,10 @@ def main():
         return reqs
 
     results = {}
-    for name, compress in [("native", False), ("splitzip", True)]:
-        sched = DisaggregatedScheduler(SchedulerConfig(
-            max_prefill_batch=8, max_decode_slots=64,
-            kv_bytes_per_token=kv_bytes_tok * 256,  # scale to paper-like KV/token
-            profile=prof, compress=compress))
+    for name, eng in [("native", eng_raw), ("splitzip", eng_sz)]:
+        sched = DisaggregatedScheduler(eng.scheduler_config(
+            prof, max_prefill_batch=8, max_decode_slots=64,
+            kv_bytes_per_token=kv_bytes_tok * 256))  # paper-like KV/token
         for r in trace():
             sched.submit(r)
         results[name] = summarize(sched.run())

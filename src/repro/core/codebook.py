@@ -150,6 +150,14 @@ class Codebook:
         return Codebook(fmt=d["fmt"], exponents=tuple(d["exponents"]))
 
 
+# The uncalibrated bf16 fallback: the 16-exponent normal-activation band
+# below the bias.  Every consumer that needs a codebook before (or without)
+# a calibration pass — serve/dryrun launchers, the scheduler's analytic
+# bucket plans, gradient compression — must share THIS object so the default
+# band can never silently diverge between them.
+DEFAULT_BF16_CODEBOOK = Codebook(fmt="bf16", exponents=tuple(range(112, 128)))
+
+
 def calibrate(
     tensors: Iterable[np.ndarray],
     k: int = 16,

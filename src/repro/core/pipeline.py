@@ -84,6 +84,35 @@ def pipeline_makespan(chunk_bytes: Sequence[float], p: CodecProfile) -> float:
                              ) + p.fixed_overhead_s
 
 
+def expected_schedule_attempts(n_attempts: int,
+                               overflow_p: float) -> Tuple[float, float]:
+    """``(expected encode attempts, raw-fallback fraction)`` for a capacity
+    schedule of ``n_attempts`` steps when each attempt independently overflows
+    with probability ``overflow_p``.
+
+    Attempt k+1 runs iff all k previous attempts overflowed, so the expected
+    attempt count is the truncated geometric series ``sum p^k``; the schedule
+    exhausts (raw fallback, full link cost) with probability ``p^K``."""
+    p = min(max(overflow_p, 0.0), 1.0)
+    if p <= 0.0 or n_attempts <= 0:
+        return (1.0 if n_attempts > 0 else 0.0), 0.0
+    return sum(p ** k for k in range(n_attempts)), p ** n_attempts
+
+
+def degraded_stage_times(s_bytes: float, p: CodecProfile, *,
+                         attempts: float = 1.0,
+                         raw_frac: float = 0.0) -> Tuple[float, float, float]:
+    """:func:`stage_times` under capacity-schedule expectations: the encoder
+    re-runs ``attempts`` times on average, and a ``raw_frac`` fraction of the
+    bytes exhausts the schedule — shipping raw at FULL link cost with no
+    decode.  ``attempts=1, raw_frac=0`` reduces to :func:`stage_times`."""
+    t_enc = attempts * s_bytes / p.g_enc
+    t_xfer = s_bytes * ((1.0 - raw_frac) / (p.ratio * p.link_bw)
+                        + raw_frac / p.link_bw)
+    t_dec = (1.0 - raw_frac) * s_bytes / p.g_dec
+    return t_enc, t_xfer, t_dec
+
+
 def hiding_bandwidth(p: CodecProfile) -> float:
     """B_hide = min(G_enc, G_dec) / rho  (Appendix A)."""
     return min(p.g_enc, p.g_dec) / p.ratio

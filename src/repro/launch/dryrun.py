@@ -108,10 +108,8 @@ def _variant_ctx(variant: str):
 
 
 def _transfer_config(variant: str):
-    from repro.core.codebook import Codebook
+    from repro.core.codebook import DEFAULT_BF16_CODEBOOK as cb
     from repro.serving import transfer as T
-    # fixed production codebook (normal-activation exponent band around 126)
-    cb = Codebook(fmt="bf16", exponents=tuple(range(112, 128)))
     if variant.endswith("_raw"):
         return T.TransferConfig(codebook=cb, enabled=False)
     if variant.endswith("_chunked"):

@@ -43,7 +43,7 @@ def calibrate_on_model(cfg, params, seq=32, batch=2) -> cbm.Codebook:
     leaves = [np.asarray(jax.lax.bitcast_convert_type(x, jnp.uint16)).ravel()
               for x in jax.tree.leaves(state.cache) if x.dtype == jnp.bfloat16]
     if not leaves:
-        return cbm.Codebook(fmt="bf16", exponents=tuple(range(112, 128)))
+        return cbm.DEFAULT_BF16_CODEBOOK
     return cbm.calibrate(leaves, k=16)
 
 

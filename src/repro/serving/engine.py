@@ -101,6 +101,24 @@ class DisaggregatedEngine:
         """The resolved per-leaf routing table (empty before first transfer)."""
         return self.plan.describe() if self.plan is not None else "(no plan yet)"
 
+    def scheduler_config(self, profile: Optional[CodecProfile] = None,
+                         **overrides) -> "SchedulerConfig":
+        """A :class:`~repro.serving.scheduler.SchedulerConfig` whose admission
+        engine charges transfers through THIS engine's transfer policy: the
+        already-resolved :class:`TransferPlan` when one exists (the same
+        object the session executes — the scheduler's numbers then flow
+        through the real transfer path's plan), else per-bucket plans built
+        from the engine's ``TransferConfig``.  ``profile`` defaults to the
+        engine's profile; any other ``SchedulerConfig`` field passes through
+        ``overrides``."""
+        from repro.serving.scheduler import SchedulerConfig
+        kw = dict(profile=profile if profile is not None else self.profile,
+                  plan=self.plan, transfer_config=self.tc,
+                  compress=self.tc.enabled,
+                  n_chunks=max(1, self.tc.n_chunks))
+        kw.update(overrides)
+        return SchedulerConfig(**kw)
+
     # -- the three pipeline stages ------------------------------------------
     def prefill(self, batch: Dict, max_seq: Optional[int] = None):
         out = prefill_step(self.params, batch, self.cfg, max_seq=max_seq)

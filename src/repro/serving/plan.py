@@ -51,7 +51,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import codec as C
 from repro.core.backend import CodecBackend, get_backend, resolve_backend
 from repro.core.codebook import Codebook
-from repro.core.pipeline import CodecProfile, pipeline_makespan
+from repro.core.pipeline import (CodecProfile, degraded_stage_times,
+                                 expected_schedule_attempts,
+                                 flowshop_makespan)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -322,15 +324,18 @@ class TransferPlan:
     def raw_bytes(self) -> float:
         return float(sum(r.raw_bytes for r in self.routes))
 
-    def chunk_raw_bytes(self) -> List[float]:
-        """Raw byte size of each pipeline chunk, as actually segmented."""
-        return [s.raw_bytes for s in self.segments]
+    def chunk_raw_bytes(self, scale: float = 1.0) -> List[float]:
+        """Raw byte size of each pipeline chunk, as actually segmented.
+        ``scale`` shrinks/grows every segment proportionally (the scheduler's
+        per-prompt-length byte scaling within a bucket plan)."""
+        return [s.raw_bytes * scale for s in self.segments]
 
-    def byte_split(self) -> Tuple[float, float, float]:
+    def byte_split(self, scale: float = 1.0) -> Tuple[float, float, float]:
         """(stream_bytes, fp8_sidecar_bytes, incompressible_bytes) under the
         route table: stream = bf16 bits + fp32 hi halves (codec ratio
         applies), fp8 sidecars compress outside the pipe, incompressible =
-        raw passthrough + fp32 lo halves (full link cost — no ratio)."""
+        raw passthrough + fp32 lo halves (full link cost — no ratio).
+        ``scale`` multiplies every class (per-prompt-length scaling)."""
         stream = 2.0 * self.stream_len
         fp8 = out = 0.0
         for r in self.routes:
@@ -340,24 +345,58 @@ class TransferPlan:
                 out += 2.0 * r.n_elements           # the raw lo half
             elif r.route == "raw":
                 out += r.raw_bytes
-        return stream, fp8, out
+        return stream * scale, fp8 * scale, out * scale
 
-    def estimate_time(self, profile: CodecProfile) -> float:
+    def expected_attempts(self, overflow_p: float) -> Tuple[float, float]:
+        """``(expected encode attempts per unit, raw-fallback fraction)``
+        under THIS plan's geometric capacity schedule when each attempt
+        independently overflows with probability ``overflow_p``.  The
+        schedule length is read off a representative encoded unit — the
+        first segment (chunked) or the largest encoded leaf (tensor)."""
+        if overflow_p <= 0.0:
+            return 1.0, 0.0
+        if self.segments:
+            n, cap = self.segments[0].n_elements, self.segments[0].cap
+        else:
+            enc = [r for r in self.routes if r.route != "raw"]
+            if not enc:
+                return 1.0, 0.0
+            big = max(enc, key=lambda r: r.n_elements)
+            n, cap = big.n_elements, big.cap
+        return expected_schedule_attempts(len(self.schedule_for(n, cap)),
+                                          overflow_p)
+
+    def estimate_time(self, profile: CodecProfile, *, scale: float = 1.0,
+                      overflow_p: float = 0.0) -> float:
         """Plan-aware a-priori transfer time for ONE execution: the flowshop
         recurrence over the plan's ACTUAL segment sizes (tensor granularity:
         additive), charging the codec ratio only on routed bytes —
         incompressible sidecars (lo halves, raw passthrough) pay full link
-        cost."""
-        stream, fp8, out = self.byte_split()
-        t_side = (fp8 / (profile.ratio * profile.link_bw)
+        cost.
+
+        ``scale`` evaluates the plan at a different payload size (the
+        scheduler charges requests of one prompt-length bucket off one plan);
+        ``overflow_p`` walks the capacity schedule in expectation: encode
+        re-attempts inflate the encode stage and the exhausted fraction
+        ships raw at full link bandwidth."""
+        stream, fp8, out = self.byte_split(scale)
+        attempts, raw_frac = self.expected_attempts(overflow_p)
+        # fp8 sidecars walk the same capacity schedule: their exhausted
+        # fraction also ships raw at full link cost
+        t_side = (fp8 * ((1.0 - raw_frac) / (profile.ratio * profile.link_bw)
+                         + raw_frac / profile.link_bw)
                   + out / profile.link_bw)
         if self.granularity == "chunked":
-            return (pipeline_makespan(self.chunk_raw_bytes(), profile)
+            times = [degraded_stage_times(s, profile, attempts=attempts,
+                                          raw_frac=raw_frac)
+                     for s in self.chunk_raw_bytes(scale)]
+            return (flowshop_makespan(times) + profile.fixed_overhead_s
                     + t_side)
-        enc_dec = stream + fp8                       # bytes the codec touches
-        t_enc = enc_dec / profile.g_enc
-        t_dec = enc_dec / profile.g_dec
-        t_xfer = stream / (profile.ratio * profile.link_bw)
+        t_enc, t_xfer, t_dec = degraded_stage_times(stream, profile,
+                                                    attempts=attempts,
+                                                    raw_frac=raw_frac)
+        t_enc += attempts * fp8 / profile.g_enc      # fp8 sidecars are
+        t_dec += (1.0 - raw_frac) * fp8 / profile.g_dec  # codec-touched too
         return t_enc + t_xfer + t_dec + t_side + profile.fixed_overhead_s
 
     def describe(self) -> str:

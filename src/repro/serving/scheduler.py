@@ -1,28 +1,55 @@
-"""Request scheduler for disaggregated serving (continuous batching).
+"""Event-driven, plan-aware request scheduler for disaggregated serving.
 
-Pure-Python orchestration around the jitted prefill/transfer/decode steps:
+Pure-Python admission engine around the jitted prefill/transfer/decode steps:
 requests arrive with a prompt length and a max-new-tokens budget; the
-scheduler assembles prefill batches (padded to a bucket), hands the produced
-caches to the transfer engine, admits transferred requests into decode slots,
-and retires finished requests.  Timing is simulated with the analytic codec /
-link profile so the same scheduler drives both the real CPU execution (tiny
-configs, tests) and the paper-scale what-if sweeps (Fig. 2 analogue).
+scheduler assembles prefill batches, serializes the produced caches over the
+PD link, admits transferred requests into decode slots, and retires finished
+requests.  Timing is simulated with the analytic codec/link profile so the
+same scheduler drives both the real CPU execution (tiny configs, tests) and
+the paper-scale what-if sweeps (Fig. 2 analogue).
 
-The transfer-time model follows the engine's granularity setting:
-``n_chunks == 1`` uses the additive whole-tensor accounting (paper Fig. 4),
-``n_chunks > 1`` uses the chunked steady-state pipeline (paper Appendix A),
-matching ``transfer_cache_chunked``'s ChunkSchedule overlap.
+Transfer time is charged from a real :class:`~repro.serving.plan.TransferPlan`
+— the same object the execution path runs — via ``plan.estimate_time``: the
+3-stage flowshop recurrence over the plan's ACTUAL segment sizes (chunked
+granularity), additive accounting (tensor granularity), or the native link
+cost (compression disabled -> all-raw routes).  Plans are built once per
+prompt-length bucket from the arch config's cache structure (or a synthetic
+bf16 structure derived from ``kv_bytes_per_token``) and reused across every
+request of that bucket, mirroring ``DisaggregatedEngine._session_for``'s
+compile-once/run-many contract; ``SchedulerConfig.plan`` accepts an engine's
+already-resolved plan directly.  Expected capacity-schedule retries and raw
+fallbacks (``overflow_p``) inflate the charged encode attempts and ship the
+fallback fraction at full link cost.
+
+The simulation itself is an event queue (prefill-done, transfer-done,
+decode-step) over three resources:
+
+* **prefill worker** — batches up to ``max_prefill_batch`` arrived requests,
+  one batch in flight at a time;
+* **transfer link** — strictly FIFO by prefill completion; each request
+  occupies the link EXACTLY once (``link_start`` .. ``transfer_done``),
+  regardless of how long it then waits for a decode slot;
+* **decode worker** — continuous batching in lockstep steps of
+  ``decode_time_per_step``; transferred requests wait in an explicit
+  admission queue until a slot is free AND join at a step boundary, so TTFT
+  reflects both link and decode-worker occupancy.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from collections import deque
-from typing import Callable, Dict, List, Optional
+import math
+from typing import Dict, List, Optional, Tuple
 
-from repro.core.pipeline import (CodecProfile, additive_transfer_time,
-                                 native_transfer_time, pipelined_transfer_time)
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.codebook import DEFAULT_BF16_CODEBOOK
+from repro.core.pipeline import CodecProfile
+from repro.models.kvcache import init_cache
+from repro.serving.plan import TransferConfig, TransferPlan
 
 
 @dataclasses.dataclass
@@ -33,7 +60,9 @@ class Request:
     max_new_tokens: int
     # filled in by the pipeline:
     prefill_done: float = -1.0
-    transfer_done: float = -1.0
+    link_start: float = -1.0         # single link occupancy: [link_start,
+    transfer_done: float = -1.0      #                         transfer_done)
+    admit_time: float = -1.0         # admitted into a decode slot
     first_token_time: float = -1.0   # TTFT
     finish_time: float = -1.0
     tokens_out: int = 0
@@ -45,96 +74,217 @@ class SchedulerConfig:
     max_decode_slots: int = 64
     prefill_time_per_token: float = 2e-6     # model-dependent sim constant
     decode_time_per_step: float = 2e-3
-    kv_bytes_per_token: int = 0              # set from the arch config
+    kv_bytes_per_token: int = 0              # sizes synthetic bucket plans
     profile: Optional[CodecProfile] = None   # codec/link profile
     compress: bool = True
-    # transfer-granularity model: 1 => additive whole-tensor accounting
-    # (paper Fig. 4); >1 => chunked pipeline, encode/transfer/decode overlap
-    # (paper Appendix A; matches transfer_cache_chunked's ChunkSchedule)
-    n_chunks: int = 1
+    n_chunks: int = 1                        # segments per bucket plan
+    # --- plan-aware admission (ROADMAP: "Plan-aware scheduler admission") ---
+    # a pre-resolved plan (e.g. DisaggregatedEngine.plan): charged for every
+    # request, byte-scaled by prompt_len * kv_bytes_per_token
+    plan: Optional[TransferPlan] = None
+    # build per-bucket plans from this arch's real cache structure instead of
+    # the synthetic kv_bytes_per_token stream
+    arch: Optional[ArchConfig] = None
+    # codec policy for bucket plans (codebook/backend/layout/caps); enabled is
+    # ANDed with ``compress``, n_chunks is overridden by ``n_chunks`` above
+    transfer_config: Optional[TransferConfig] = None
+    bucket_tokens: int = 1024                # prompt-length bucket granularity
+    # expected per-attempt escape-overflow probability: walks the plan's
+    # geometric capacity schedule in expectation (extra encode attempts +
+    # raw-fallback fraction at full link cost)
+    overflow_p: float = 0.0
+
+
+# same-timestamp event ordering: complete work before starting new work
+_PRIO_ARRIVAL, _PRIO_PREFILL, _PRIO_TRANSFER, _PRIO_STEP = range(4)
 
 
 class DisaggregatedScheduler:
     """Event-driven PD scheduler with a SplitZip-compressed transfer stage."""
 
     def __init__(self, cfg: SchedulerConfig):
+        if (cfg.plan is not None and cfg.profile is not None
+                and cfg.kv_bytes_per_token <= 0):
+            # scale = 1.0 here would silently charge every prompt length the
+            # plan's build-time bytes — a flat, wrong transfer curve
+            raise ValueError(
+                "SchedulerConfig.plan needs kv_bytes_per_token > 0 to scale "
+                "the plan's bytes to each request's prompt length")
         self.cfg = cfg
-        self.pending: deque[Request] = deque()
-        self.transferring: List[Request] = []
+        # (sort-key, rid, Request) heaps: deterministic under any submission
+        # interleaving — ties always break on rid
+        self.pending: List[Tuple[float, int, Request]] = []      # by arrival
+        self.xfer_queue: List[Tuple[float, int, Request]] = []   # by prefill_done
+        self.admit_queue: List[Tuple[float, int, Request]] = []  # by transfer_done
         self.decoding: List[Request] = []
         self.done: List[Request] = []
-        self.t_prefill = 0.0   # prefill worker busy-until
-        self.t_link = 0.0      # transfer link busy-until
-        self.t_decode = 0.0    # decode worker busy-until
+        self.plans: Dict[int, TransferPlan] = {}   # bucket tokens -> plan
+        self.link_busy_s = 0.0                     # total charged link time
+        self._events: List[Tuple[float, int, int, tuple]] = []
+        self._seq = 0
+        self._prefill_busy = False
+        self._link_busy = False
+        self._step_inflight = False
 
     def submit(self, req: Request):
-        self.pending.append(req)
+        # TTFT is defined by the first decoded token, so every served request
+        # decodes at least one step; a non-positive budget is clamped rather
+        # than looping forever in the drain (regression: ISSUE 4)
+        if req.max_new_tokens < 1:
+            req.max_new_tokens = 1
+        self._push(req.arrival, _PRIO_ARRIVAL, ("arrival", req))
 
-    def _transfer_time(self, prompt_len: int) -> float:
-        bytes_ = prompt_len * self.cfg.kv_bytes_per_token
+    # -- plan-aware transfer charging ---------------------------------------
+    def _bucket(self, prompt_len: int) -> int:
+        b = max(1, self.cfg.bucket_tokens)
+        return max(b, -(-prompt_len // b) * b)
+
+    def _bucket_plan(self, bucket: int) -> TransferPlan:
+        """Resolve the bucket's TransferPlan once, reuse for every request of
+        the bucket (compile-once/run-many, as the engine does per cache
+        structure)."""
+        plan = self.plans.get(bucket)
+        if plan is None:
+            tc = self.cfg.transfer_config or TransferConfig(
+                codebook=DEFAULT_BF16_CODEBOOK)
+            tc = dataclasses.replace(tc, enabled=tc.enabled and self.cfg.compress,
+                                     n_chunks=self.cfg.n_chunks)
+            if self.cfg.arch is not None:
+                structure = jax.eval_shape(
+                    lambda: init_cache(self.cfg.arch, 1, bucket))
+            else:
+                n = max(1, (bucket * self.cfg.kv_bytes_per_token) // 2)
+                structure = {"kv": jax.ShapeDtypeStruct((n,), jnp.bfloat16)}
+            plan = TransferPlan.build(structure, tc)
+            self.plans[bucket] = plan
+        return plan
+
+    def _transfer_duration(self, prompt_len: int) -> float:
+        """One link occupancy, charged via ``plan.estimate_time``: flowshop
+        over the plan's actual segments (chunked), additive (tensor), native
+        link cost (all-raw), with expected capacity-schedule retries."""
         p = self.cfg.profile
-        if p is None or bytes_ == 0:
+        if p is None:
             return 0.0
-        if self.cfg.compress:
-            if self.cfg.n_chunks > 1:
-                return pipelined_transfer_time(bytes_, p, self.cfg.n_chunks)
-            return additive_transfer_time(bytes_, p)
-        return native_transfer_time(bytes_, p)
+        if self.cfg.plan is not None:
+            plan = self.cfg.plan
+            ref = plan.raw_bytes()
+            scale = (float(prompt_len * self.cfg.kv_bytes_per_token) / ref
+                     if ref > 0 else 1.0)
+        else:
+            if self.cfg.arch is None and self.cfg.kv_bytes_per_token <= 0:
+                return 0.0
+            bucket = self._bucket(prompt_len)
+            plan = self._bucket_plan(bucket)
+            if self.cfg.kv_bytes_per_token > 0:
+                scale = (float(prompt_len * self.cfg.kv_bytes_per_token)
+                         / plan.raw_bytes())
+            else:
+                scale = prompt_len / bucket
+        return plan.estimate_time(p, scale=scale,
+                                  overflow_p=self.cfg.overflow_p)
+
+    # -- the event loop ------------------------------------------------------
+    def _push(self, t: float, prio: int, payload: tuple) -> None:
+        heapq.heappush(self._events, (t, prio, self._seq, payload))
+        self._seq += 1
 
     def run(self) -> List[Request]:
-        """Drain all requests; returns completed requests with timings."""
-        while self.pending or self.transferring or self.decoding:
-            # 1) prefill stage: batch up to max_prefill_batch pending requests
-            if self.pending:
-                batch = []
-                while self.pending and len(batch) < self.cfg.max_prefill_batch:
-                    batch.append(self.pending.popleft())
-                start = max(self.t_prefill, max(r.arrival for r in batch))
-                dur = max(r.prompt_len for r in batch) * self.cfg.prefill_time_per_token
-                self.t_prefill = start + dur
-                for r in batch:
-                    r.prefill_done = self.t_prefill
-                    self.transferring.append(r)
-
-            # 2) transfer stage: serialize on the link, per request
-            still = []
-            for r in sorted(self.transferring, key=lambda r: r.prefill_done):
-                start = max(self.t_link, r.prefill_done)
-                dur = self._transfer_time(r.prompt_len)
-                self.t_link = start + dur
-                r.transfer_done = self.t_link
-                if len(self.decoding) < self.cfg.max_decode_slots:
-                    r.first_token_time = r.transfer_done + self.cfg.decode_time_per_step
-                    self.decoding.append(r)
-                else:
-                    still.append(r)
-            self.transferring = still
-
-            # 3) decode stage: step all active slots until the shortest finishes
-            if self.decoding:
-                steps = min(r.max_new_tokens - r.tokens_out for r in self.decoding)
-                self.t_decode = max(self.t_decode,
-                                    max(r.transfer_done for r in self.decoding))
-                self.t_decode += steps * self.cfg.decode_time_per_step
-                for r in list(self.decoding):
-                    r.tokens_out += steps
-                    if r.tokens_out >= r.max_new_tokens:
-                        r.finish_time = self.t_decode
-                        self.decoding.remove(r)
-                        self.done.append(r)
+        """Drain all submitted requests; returns them with timings filled."""
+        while self._events:
+            t = self._events[0][0]
+            # complete EVERY event at this timestamp before dispatching new
+            # work, so resource assignment never depends on heap-push order
+            while self._events and self._events[0][0] == t:
+                payload = heapq.heappop(self._events)[3]
+                self._handle(t, payload)
+            self._dispatch(t)
+        stranded = (len(self.pending) + len(self.xfer_queue)
+                    + len(self.admit_queue) + len(self.decoding))
+        if stranded:
+            # e.g. max_decode_slots == 0: admission can never happen and the
+            # event heap drains with requests still queued — fail loudly
+            # instead of returning a silently partial done list
+            raise RuntimeError(
+                f"{stranded} request(s) never completed (check "
+                "max_decode_slots/max_prefill_batch > 0)")
         return self.done
+
+    def _handle(self, t: float, payload: tuple) -> None:
+        kind = payload[0]
+        if kind == "arrival":
+            r = payload[1]
+            heapq.heappush(self.pending, (r.arrival, r.rid, r))
+        elif kind == "prefill_done":
+            self._prefill_busy = False
+            for r in payload[1]:
+                r.prefill_done = t
+                heapq.heappush(self.xfer_queue, (t, r.rid, r))
+        elif kind == "transfer_done":
+            r = payload[1]
+            r.transfer_done = t
+            self._link_busy = False
+            heapq.heappush(self.admit_queue, (t, r.rid, r))
+        elif kind == "decode_step":
+            self._finish_step(t, payload[1])
+
+    def _dispatch(self, t: float) -> None:
+        """Start whatever each idle resource can pick up at time ``t``."""
+        if not self._prefill_busy and self.pending:
+            batch = []
+            while self.pending and len(batch) < self.cfg.max_prefill_batch:
+                batch.append(heapq.heappop(self.pending)[2])
+            dur = (max(r.prompt_len for r in batch)
+                   * self.cfg.prefill_time_per_token)
+            self._prefill_busy = True
+            self._push(t + dur, _PRIO_PREFILL, ("prefill_done", batch))
+        if not self._link_busy and self.xfer_queue:
+            r = heapq.heappop(self.xfer_queue)[2]
+            r.link_start = t
+            dur = self._transfer_duration(r.prompt_len)
+            self.link_busy_s += dur
+            self._link_busy = True
+            self._push(t + dur, _PRIO_TRANSFER, ("transfer_done", r))
+        while self.admit_queue and len(self.decoding) < self.cfg.max_decode_slots:
+            r = heapq.heappop(self.admit_queue)[2]
+            r.admit_time = t
+            self.decoding.append(r)
+        if self.decoding and not self._step_inflight:
+            self._step_inflight = True
+            self._push(t + self.cfg.decode_time_per_step, _PRIO_STEP,
+                       ("decode_step", t))
+
+    def _finish_step(self, t: float, step_start: float) -> None:
+        """One lockstep decode step [step_start, t] completed: every slot that
+        was admitted by step_start gains a token (later joiners start with the
+        next step); finished requests retire and free their slots."""
+        self._step_inflight = False
+        for r in list(self.decoding):
+            if r.admit_time > step_start:
+                continue
+            r.tokens_out += 1
+            if r.first_token_time < 0:
+                r.first_token_time = t
+            if r.tokens_out >= r.max_new_tokens:
+                r.finish_time = t
+                self.decoding.remove(r)
+                self.done.append(r)
 
 
 def summarize(done: List[Request]) -> Dict[str, float]:
     if not done:
         return {}
-    ttfts = [r.first_token_time - r.arrival for r in done]
+    ttfts = sorted(r.first_token_time - r.arrival for r in done)
+    n = len(ttfts)
+    # nearest-rank (ceil) quantile: 1-based rank ceil(q*n); the old floor
+    # index int(q*(n-1)) underestimated the tail for small n
+    p99 = ttfts[min(n - 1, max(0, math.ceil(0.99 * n) - 1))]
     total_tokens = sum(r.tokens_out for r in done)
     makespan = max(r.finish_time for r in done) - min(r.arrival for r in done)
     return {
         "n": len(done),
-        "mean_ttft_s": sum(ttfts) / len(ttfts),
-        "p99_ttft_s": sorted(ttfts)[int(0.99 * (len(ttfts) - 1))],
+        "mean_ttft_s": sum(ttfts) / n,
+        "p99_ttft_s": p99,
         "throughput_tok_s": total_tokens / makespan if makespan > 0 else 0.0,
         "throughput_req_s": len(done) / makespan if makespan > 0 else 0.0,
     }

@@ -31,13 +31,13 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core import codec as C
-from repro.core.codebook import Codebook
+# default gradient codebook: bf16 gradients of normalized networks
+# concentrate in small-magnitude exponents — the same sub-bias band as the
+# shared activation fallback.  Refreshed by calibrate_on_grads.
+from repro.core.codebook import (Codebook,
+                                 DEFAULT_BF16_CODEBOOK as DEFAULT_GRAD_CODEBOOK)
 
 MIN_COMPRESS_ELEMS = 16384
-
-# A gradient-tuned default codebook: bf16 gradients of normalized networks
-# concentrate in small-magnitude exponents.  Refreshed by calibrate_on_grads.
-DEFAULT_GRAD_CODEBOOK = Codebook(fmt="bf16", exponents=tuple(range(112, 128)))
 
 
 def calibrate_on_grads(grads, k: int = 16) -> Codebook:
