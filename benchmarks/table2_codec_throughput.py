@@ -31,6 +31,14 @@ A ``BENCH_codec.json`` snapshot (ratios, GB/s, launch structure) is written
 next to this file so the codec-path perf trajectory is tracked PR over PR.
 Set ``SPLITZIP_BENCH_SMOKE=1`` for the CI smoke mode: tiny synthetic
 workload, SplitZip rows + structural assertions only.
+
+Every run (smoke included) also serializes the SplitZip rows as CALIBRATED
+CODEC PROFILES (``repro.core.profile``) to
+``benchmarks/results/profiles.json`` — the measured ``g_enc``/``g_dec``/
+``ratio`` per backend that the scheduler sweeps (``fig2_e2e_serving.py``)
+and the serve launcher (``--profile measured``) load instead of the paper's
+hand-entered H200 constants.  Provenance (workload size, repeats, smoke vs
+full) travels with each entry.
 """
 
 from __future__ import annotations
@@ -48,6 +56,7 @@ from benchmarks.common import (CodecResult, bench_config, cascaded_roundtrip,
 from repro.core import backend as B
 from repro.core import codebook as cbm
 from repro.core import codec as C
+from repro.core.profile import CalibratedProfile, save_profiles
 from repro.serving.plan import TransferPlan
 from repro.serving.transfer import TransferConfig, transfer_cache_chunked
 
@@ -58,6 +67,8 @@ SMOKE = bool(int(os.environ.get("SPLITZIP_BENCH_SMOKE", "0")))
 SMOKE_ELEMS = 1 << 16
 
 SNAPSHOT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_codec.json")
+PROFILES_PATH = os.path.join(os.path.dirname(__file__), "results",
+                             "profiles.json")
 
 
 def _workload() -> np.ndarray:
@@ -191,6 +202,20 @@ def run(emit) -> None:
     results.append(_measure_backend(
         "splitzip-pallas-2stage", B.PallasBackend(fused=False), x, cb, bits,
         nbytes, repeats))
+
+    # --- calibrated codec profiles (repro.core.profile) ---------------------
+    # serialize the measured SplitZip rows so the scheduler sweeps and the
+    # serve launcher run from THESE numbers instead of paper constants
+    source = "table2-smoke" if SMOKE else "table2"
+    cals = [CalibratedProfile.from_throughput(
+                r.name.split("-", 1)[1], "bf16", r.enc_gbps, r.dec_gbps,
+                r.ratio, workload_elems=int(bits.size), repeats=repeats,
+                source=source)
+            for r in results
+            if r.name in {f"splitzip-{b}" for b in SPLITZIP_BACKENDS}]
+    profiles_path = save_profiles(cals, PROFILES_PATH)
+    emit("table2", "calibrated-profiles", dict(
+        path=os.path.relpath(profiles_path), n=len(cals), source=source))
 
     # --- planned vs legacy transfer (plan/execute API regression row) -------
     transfer_row = _planned_vs_legacy_transfer(x, cb, nbytes, repeats)

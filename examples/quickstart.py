@@ -25,7 +25,8 @@ import numpy as np
 from repro.core import codebook as cbm
 from repro.core import codec
 from repro.core.backend import get_backend
-from repro.core.pipeline import CodecProfile, hiding_bandwidth, speedup
+from repro.core.pipeline import hiding_bandwidth, speedup
+from repro.core.profile import paper_profile
 
 
 def main():
@@ -91,8 +92,10 @@ def main():
           f"(escape rate {ct_w.stats.escape_rate:.4%}) — bit-exact")
 
     # --- 6) when does the codec pay off? (paper Appendix A) ------------------
-    prof = CodecProfile(g_enc=613.3e9, g_dec=2181.8e9, ratio=1.324,
-                        link_bw=50e9)  # 400GbE, paper's measured codec
+    # 400GbE link + the paper's H200 codec constants (repro.core.profile —
+    # the ONE place they live; 'measured' profiles come from the table2
+    # benchmark's profiles.json)
+    prof = paper_profile(link_bw=50e9)
     print(f"\nAppendix A: B_hide = {hiding_bandwidth(prof) / 1e9:.1f} GB/s "
           f"(paper: ~463.2 GB/s)")
     s = 1 << 30

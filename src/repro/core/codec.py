@@ -45,7 +45,7 @@ class CompressedTensor:
     """Pytree carrying the SplitZip streams for one tensor."""
 
     sign_mantissa: jax.Array  # u8[N]
-    packed: jax.Array         # u8[N//2] (4-bit codes) or u8[N] (3-bit, unpacked in-graph)
+    packed: jax.Array         # u8[N//2] (nibble-packed, k<=16) or u8[N] (k>16)
     esc_pos: jax.Array        # u16[C, cap]
     esc_val: jax.Array        # u8[C, cap]
     esc_count: jax.Array      # i32[C]

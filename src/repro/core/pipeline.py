@@ -21,13 +21,21 @@ from typing import List, Sequence, Tuple
 
 @dataclasses.dataclass(frozen=True)
 class CodecProfile:
-    """Measured or assumed codec/link characteristics (all bytes/s)."""
+    """Measured or assumed codec/link characteristics (all bytes/s).
+
+    ``source`` records provenance: ``"paper-h200"`` for the paper's datasheet
+    constants, ``"measured:<backend>/<fmt>"`` for profiles calibrated from a
+    real codec run (:mod:`repro.core.profile`), ``"assumed"`` for hand-built
+    test fixtures.  Every scheduler/benchmark number inherits the profile it
+    was charged with, so the provenance string is what makes a what-if sweep
+    auditable."""
 
     g_enc: float          # compression throughput (vs uncompressed bytes)
     g_dec: float          # decompression throughput
     ratio: float          # compression ratio rho
     link_bw: float        # physical link bandwidth for compressed bytes
     fixed_overhead_s: float = 0.0  # per-transfer launch/setup cost
+    source: str = "assumed"        # provenance (see repro.core.profile)
 
 
 def stage_times(s_bytes: float, p: CodecProfile) -> Tuple[float, float, float]:
@@ -136,9 +144,13 @@ class ChunkSchedule:
     """An explicit overlapped schedule for the transfer engine: at step t the
     engine encodes chunk t, transfers chunk t-1 and decodes chunk t-2.
 
-    Driven by ``repro.serving.transfer.transfer_cache_chunked`` (the chunked
-    pipelined engine) and modeled analytically by ``pipelined_transfer_time``
-    (what the scheduler charges when ``n_chunks > 1``)."""
+    Driven by :class:`repro.serving.session.TransferSession` (both the local
+    chunked path and the mesh double-buffered ppermute path iterate these
+    stages) and modeled analytically by
+    :meth:`repro.serving.plan.TransferPlan.estimate_time` — the flowshop
+    recurrence over the plan's actual segment sizes, which is what the
+    scheduler charges.  ``pipelined_transfer_time`` is the legacy equal-chunk
+    closed form kept for cross-checks (equal segments reduce to it exactly)."""
 
     n_chunks: int
 

@@ -1,0 +1,333 @@
+"""Calibrated codec profiles: measure the real codec, serialize, reload.
+
+The scheduler's end-to-end numbers (Fig. 2 TTFT / request-throughput
+speedups) are only as good as the :class:`~repro.core.pipeline.CodecProfile`
+they are charged with.  Until ISSUE 5 those profiles were hand-entered paper
+constants (H200 datasheet numbers copied into every launcher); ZipServ
+(arXiv 2603.17435) makes the obvious counter-argument — calibrate the cost
+model from *measured* codec throughput on the deployment's actual hardware
+and the what-if sweeps start tracking reality.
+
+This module is that calibration subsystem:
+
+* :meth:`CalibratedProfile.measure` runs the REAL codec — the same
+  backend-registry dispatch (:mod:`repro.core.backend`) the serving path
+  uses — over a synthetic KV-shaped workload and records encode/decode
+  throughput plus the achieved compression ratio, with provenance
+  (backend, format, workload size, repeats).
+* :func:`save_profiles` / :func:`load_profiles` serialize a set of
+  calibrated profiles to JSON (``benchmarks/results/profiles.json`` by
+  convention; ``benchmarks/table2_codec_throughput.py`` writes one on every
+  run, including CI smoke mode).
+* :func:`resolve_profile` is the single entry point launchers and
+  benchmarks use to turn a profile *source* (``"paper"``, ``"measured"``,
+  or a ``profiles.json`` path) plus a link bandwidth into a concrete
+  :class:`CodecProfile`.  The paper's datasheet constants live HERE and
+  nowhere else — ``src/repro/serving`` and ``src/repro/launch`` are kept
+  free of hard-coded throughput numbers by a CI grep guard.
+
+Example — calibrate once, drive the scheduler from the measurement::
+
+    from repro.core.profile import CalibratedProfile, resolve_profile
+
+    cal = CalibratedProfile.measure(backend="xla")       # runs the codec
+    save_profiles([cal], "benchmarks/results/profiles.json")
+    ...
+    prof = resolve_profile("benchmarks/results/profiles.json",
+                           link_bw=50e9, backend="xla")
+    cfg = SchedulerConfig(profile=prof, ...)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backend import get_backend
+from repro.core.codebook import Codebook, calibrate
+from repro.core.pipeline import CodecProfile
+
+# ---------------------------------------------------------------------------
+# the paper's datasheet constants — the ONE place they are allowed to live
+# ---------------------------------------------------------------------------
+
+#: Paper §4.1 measured H200 codec throughput (bytes/s vs uncompressed bytes).
+PAPER_G_ENC = 613.3e9
+#: Paper §4.1 measured H200 decompression throughput.
+PAPER_G_DEC = 2181.8e9
+#: Paper Table 2 compression ratio on Qwen3-32B KV caches.
+PAPER_RATIO = 1.324
+
+#: Default on-disk location for calibrated profiles, relative to the repo
+#: root (launchers are documented to run from there); override with the
+#: ``SPLITZIP_PROFILES`` environment variable or an explicit ``path=``.
+DEFAULT_PROFILES_PATH = os.environ.get(
+    "SPLITZIP_PROFILES", os.path.join("benchmarks", "results", "profiles.json"))
+
+PROFILES_SCHEMA_VERSION = 1
+
+
+def paper_profile(link_bw: float, *, ratio: float = PAPER_RATIO,
+                  fixed_overhead_s: float = 0.0) -> CodecProfile:
+    """The paper's H200 codec numbers under a caller-chosen link bandwidth.
+
+    This is the documented fallback when no calibrated ``profiles.json``
+    exists (fresh checkout, no benchmark run yet) — provenance is recorded
+    as ``"paper-h200"`` so downstream reports can say which cost model they
+    were computed under."""
+    return CodecProfile(g_enc=PAPER_G_ENC, g_dec=PAPER_G_DEC, ratio=ratio,
+                        link_bw=link_bw, fixed_overhead_s=fixed_overhead_s,
+                        source="paper-h200")
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+def _synthetic_kv_bits(n: int, seed: int = 0) -> np.ndarray:
+    """KV-like bf16 bits: exponents concentrated on a top-16 band (the same
+    synthetic workload shape the table2 smoke benchmark uses)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n) * np.exp(rng.standard_normal(n))
+    return np.asarray(jax.lax.bitcast_convert_type(
+        jnp.asarray(x.astype(np.float32), dtype=jnp.bfloat16), jnp.uint16))
+
+
+def _time(fn, repeats: int, warmup: int) -> float:
+    """Mean wall-clock seconds of ``fn`` (blocks on async jax results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.mean(times))
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedProfile:
+    """One backend/format's measured codec characteristics + provenance.
+
+    The codec half of a :class:`~repro.core.pipeline.CodecProfile`: encode
+    and decode throughput in bytes/s (against uncompressed bytes, the
+    convention every analytic model in :mod:`repro.core.pipeline` uses) and
+    the achieved compression ratio.  The link bandwidth is deliberately NOT
+    part of a calibration — the codec is a property of the machine, the link
+    a property of the deployment — so :meth:`profile` takes it as an
+    argument when materializing a :class:`CodecProfile`.
+
+    ``workload_elems``/``repeats``/``source`` record how the numbers were
+    obtained; they travel through ``profiles.json`` so a scheduler sweep can
+    always answer "calibrated from what?"."""
+
+    backend: str          # codec backend registry key ('xla', 'pallas', ...)
+    fmt: str              # container format measured ('bf16', 'fp8_e5m2')
+    g_enc: float          # encode throughput, bytes/s vs uncompressed
+    g_dec: float          # decode throughput, bytes/s vs uncompressed
+    ratio: float          # achieved compression ratio on the workload
+    workload_elems: int   # elements in the measured workload
+    repeats: int          # timed repetitions averaged
+    source: str = "measured"
+
+    @property
+    def key(self) -> str:
+        """Registry key inside ``profiles.json``: ``backend/fmt``."""
+        return f"{self.backend}/{self.fmt}"
+
+    def profile(self, link_bw: float,
+                fixed_overhead_s: float = 0.0) -> CodecProfile:
+        """Materialize a :class:`CodecProfile` under ``link_bw`` (bytes/s)."""
+        return CodecProfile(g_enc=self.g_enc, g_dec=self.g_dec,
+                            ratio=self.ratio, link_bw=link_bw,
+                            fixed_overhead_s=fixed_overhead_s,
+                            source=f"{self.source}:{self.key}")
+
+    @classmethod
+    def measure(cls, backend: str = "xla",
+                shapes: Sequence[Tuple[int, ...]] = ((1 << 16,),), *,
+                codebook: Optional[Codebook] = None,
+                repeats: int = 3, warmup: int = 1,
+                seed: int = 0, source: str = "measured") -> "CalibratedProfile":
+        """Run the real codec through the backend registry and time it.
+
+        ``shapes`` lists the tensor shapes to measure over (aggregate
+        throughput across all of them, so a mix of KV-leaf shapes measures
+        the same work the serving path does).  The codebook defaults to a
+        calibration on the workload itself — the production setup, where the
+        offline top-16 calibration precedes deployment.
+
+        Returns a :class:`CalibratedProfile`; serialize a batch of them with
+        :func:`save_profiles`."""
+        be = get_backend(backend)
+        total_bytes = 0.0
+        total_wire = 0.0
+        t_enc_total = 0.0
+        t_dec_total = 0.0
+        workload_elems = 0
+        for shape in shapes:
+            n = int(np.prod(shape))
+            bits = _synthetic_kv_bits(n, seed=seed)
+            cb = codebook or calibrate([bits], k=16)
+            x = jax.lax.bitcast_convert_type(
+                jnp.asarray(bits), jnp.bfloat16).reshape(shape)
+            if be.jittable:
+                enc = jax.jit(lambda v, _be=be, _cb=cb: _be.encode(v, _cb))
+                dec = jax.jit(lambda c, _be=be: _be.decode(c))
+            else:
+                enc = lambda v, _be=be, _cb=cb: _be.encode(v, _cb)
+                dec = lambda c, _be=be: _be.decode(c)
+            ct = enc(x)
+            nbytes = float(bits.nbytes)
+            total_bytes += nbytes
+            total_wire += float(be.wire_bytes(ct))
+            workload_elems += n
+            t_enc_total += _time(lambda: enc(x), repeats, warmup)
+            t_dec_total += _time(lambda: dec(ct), repeats, warmup)
+        return cls(backend=be.name, fmt=(codebook.fmt if codebook else "bf16"),
+                   g_enc=total_bytes / max(t_enc_total, 1e-12),
+                   g_dec=total_bytes / max(t_dec_total, 1e-12),
+                   ratio=total_bytes / max(total_wire, 1.0),
+                   workload_elems=workload_elems, repeats=repeats,
+                   source=source)
+
+    @classmethod
+    def from_throughput(cls, backend: str, fmt: str, enc_gbps: float,
+                        dec_gbps: float, ratio: float, *,
+                        workload_elems: int, repeats: int,
+                        source: str = "measured") -> "CalibratedProfile":
+        """Build from already-measured GB/s numbers (the table2 benchmark
+        measures with its own harness and serializes through this)."""
+        return cls(backend=backend, fmt=fmt, g_enc=enc_gbps * 1e9,
+                   g_dec=dec_gbps * 1e9, ratio=ratio,
+                   workload_elems=workload_elems, repeats=repeats,
+                   source=source)
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+def save_profiles(profiles: Iterable[CalibratedProfile],
+                  path: Optional[str] = None) -> str:
+    """Serialize calibrated profiles to JSON (keyed ``backend/fmt``; later
+    entries with the same key win).  Returns the path written."""
+    path = path or DEFAULT_PROFILES_PATH
+    payload = {"version": PROFILES_SCHEMA_VERSION,
+               "profiles": {p.key: dataclasses.asdict(p) for p in profiles}}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_profiles(path: Optional[str] = None) -> Dict[str, CalibratedProfile]:
+    """Load ``profiles.json`` -> ``{key: CalibratedProfile}``.
+
+    Raises ``FileNotFoundError`` when the file doesn't exist and
+    ``ValueError`` on a schema-version mismatch — callers that want the
+    measure-on-miss behaviour go through :func:`resolve_profile`."""
+    path = path or DEFAULT_PROFILES_PATH
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("version") != PROFILES_SCHEMA_VERSION:
+        raise ValueError(
+            f"profiles file {path!r} has schema version "
+            f"{payload.get('version')!r}, expected {PROFILES_SCHEMA_VERSION}; "
+            "re-run benchmarks/table2_codec_throughput.py to regenerate")
+    return {k: CalibratedProfile(**v)
+            for k, v in payload.get("profiles", {}).items()}
+
+
+def _pick(profiles: Dict[str, CalibratedProfile], backend: Optional[str],
+          fmt: str) -> CalibratedProfile:
+    if backend is not None and backend != "auto":
+        key = f"{backend}/{fmt}"
+        if key not in profiles:
+            raise KeyError(
+                f"no calibrated profile for {key!r}; available: "
+                f"{sorted(profiles)} — re-run the table2 benchmark or pass "
+                "--profile paper")
+        return profiles[key]
+    # unspecified / 'auto': prefer the XLA reference measurement, else any
+    # entry of the requested format, deterministically
+    for key in (f"xla/{fmt}",):
+        if key in profiles:
+            return profiles[key]
+    matches = sorted(k for k in profiles if k.endswith(f"/{fmt}"))
+    if not matches:
+        raise KeyError(f"no calibrated profile of format {fmt!r}; "
+                       f"available: {sorted(profiles)}")
+    return profiles[matches[0]]
+
+
+def resolve_calibration(path: Optional[str] = None, *,
+                        backend: Optional[str] = None, fmt: str = "bf16",
+                        source: str = "measured-on-demand") -> CalibratedProfile:
+    """The load-or-measure resolution behind ``--profile measured``: load the
+    ``backend/fmt`` entry from ``path`` (default
+    :data:`DEFAULT_PROFILES_PATH`); when the file or the entry doesn't exist
+    yet, measure a small workload NOW, merge it into the file, and return it.
+
+    A schema-version mismatch propagates as ``ValueError`` (a stale file
+    should be regenerated deliberately, never silently overwritten).  Returns
+    the raw :class:`CalibratedProfile` — callers that need a
+    :class:`CodecProfile` go through :func:`resolve_profile`; callers that
+    need the measurement itself (e.g. fig2's time dilation) use this."""
+    path = path or DEFAULT_PROFILES_PATH
+    try:
+        return _pick(load_profiles(path), backend, fmt)
+    except (FileNotFoundError, KeyError):
+        pass
+    be = backend if backend not in (None, "auto") else "xla"
+    cal = CalibratedProfile.measure(backend=be, source=source)
+    try:
+        merged = load_profiles(path)
+    except FileNotFoundError:
+        merged = {}
+    merged[cal.key] = cal
+    save_profiles(merged.values(), path)
+    return cal
+
+
+def resolve_profile(source: str, *, link_bw: float,
+                    fixed_overhead_s: float = 0.0,
+                    backend: Optional[str] = None, fmt: str = "bf16",
+                    path: Optional[str] = None) -> CodecProfile:
+    """Turn a profile *source* into a concrete :class:`CodecProfile`.
+
+    ``source`` is one of:
+
+    * ``"paper"`` — the paper's H200 datasheet constants
+      (:func:`paper_profile`); the fresh-checkout default for launchers.
+    * ``"measured"`` — load the calibrated ``profiles.json`` (``path=`` or
+      :data:`DEFAULT_PROFILES_PATH`); when the file doesn't exist yet,
+      measure a small workload NOW with :meth:`CalibratedProfile.measure`,
+      save it there, and use it — so ``--profile measured`` works on a
+      machine that never ran the benchmarks.
+    * a path ending in ``.json`` — load exactly that profiles file (raise
+      if missing: an explicit path is a claim that a calibration exists).
+
+    ``backend`` selects which measurement to use (``None``/``"auto"``
+    prefers the XLA reference entry); ``link_bw``/``fixed_overhead_s``
+    parameterize the deployment's link, which is never part of a codec
+    calibration."""
+    if source == "paper":
+        return paper_profile(link_bw, fixed_overhead_s=fixed_overhead_s)
+    if source.endswith(".json"):
+        return _pick(load_profiles(source), backend, fmt).profile(
+            link_bw, fixed_overhead_s)
+    if source == "measured":
+        return resolve_calibration(path, backend=backend, fmt=fmt).profile(
+            link_bw, fixed_overhead_s)
+    raise ValueError(
+        f"unknown profile source {source!r}; expected 'paper', 'measured', "
+        "or a profiles.json path")

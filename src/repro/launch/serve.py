@@ -15,6 +15,15 @@ routes fp32 recurrent states through the plan's hi/lo split (folded into
 the chunked stream).  The engine resolves all of this ONCE into a
 ``TransferPlan`` (printed at the end as the per-leaf routing table) and
 executes it through a ``TransferSession`` on every transfer.
+
+``--profile`` selects the codec-profile source for the analytic transfer
+report (:mod:`repro.core.profile`): ``paper`` (the H200 datasheet
+constants, the fresh-checkout default), ``measured`` (the calibrated
+``benchmarks/results/profiles.json``, measuring a small workload on the
+spot when none exists), or an explicit ``profiles.json`` path.  The
+resolved provenance is printed with the report, so "speedup at N Gb/s"
+always says which cost model produced it.  See DESIGN.md's operator guide
+for the full flag walk-through.
 """
 
 from __future__ import annotations
@@ -29,7 +38,7 @@ import numpy as np
 from repro.configs.base import ShapeConfig, get_config
 from repro.core import codebook as cbm
 from repro.core.backend import available_backends
-from repro.core.pipeline import CodecProfile
+from repro.core.profile import resolve_profile
 from repro.models import model as M
 from repro.serving.engine import DisaggregatedEngine
 
@@ -67,6 +76,12 @@ def main(argv=None):
     ap.add_argument("--compress-fp32", action="store_true",
                     help="hi/lo-split-compress fp32 recurrent states "
                          "(SSM/RG-LRU) through the plan's fp32_hilo route")
+    ap.add_argument("--profile", default="paper",
+                    help="codec profile source for the analytic report: "
+                         "'paper' (H200 datasheet constants), 'measured' "
+                         "(calibrated benchmarks/results/profiles.json; "
+                         "measures a small workload now if absent), or a "
+                         "profiles.json path")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -80,8 +95,9 @@ def main(argv=None):
     cb = calibrate_on_model(cfg, params)
     print(f"calibrated top-16 exponents: {cb.exponents}")
 
-    profile = CodecProfile(g_enc=613.3e9, g_dec=2181.8e9, ratio=4 / 3,
-                           link_bw=args.link_gbps * 1e9 / 8)
+    profile = resolve_profile(args.profile,
+                              link_bw=args.link_gbps * 1e9 / 8,
+                              backend=args.codec_backend)
     eng = DisaggregatedEngine(cfg, params, cb,
                               compress=not args.no_compress,
                               backend=args.codec_backend,
@@ -120,7 +136,8 @@ def main(argv=None):
     if rep:
         print(f"analytic transfer    : native {rep.t_native*1e3:.2f} ms -> "
               f"splitzip {rep.t_splitzip*1e3:.2f} ms "
-              f"({rep.speedup:.3f}x at {args.link_gbps:.0f} Gb/s)")
+              f"({rep.speedup:.3f}x at {args.link_gbps:.0f} Gb/s, "
+              f"profile: {profile.source})")
 
 
 if __name__ == "__main__":

@@ -59,10 +59,26 @@ class EngineStats:
     chunk_retry_steps: int = 0
     # fp32 hi/lo route: raw lo mantissa halves shipped alongside the stream
     fp32_lo_wire_bytes: float = 0.0
+    # encoded units (chunks + leaves) that went down the capacity schedule —
+    # the denominator for the observed overflow probability
+    encoded_units: int = 0
+    # per-prompt-length overflow observations: cache_len -> [units, retried].
+    # DisaggregatedEngine.overflow_priors() buckets these into the
+    # scheduler's per-bucket overflow_p priors
+    overflow_obs: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
 
     @property
     def transfer_ratio(self) -> float:
         return self.raw_cache_bytes / max(self.wire_bytes, 1.0)
+
+    @property
+    def observed_overflow_p(self) -> float:
+        """Fraction of encoded units whose FIRST attempt overflowed — the
+        maximum-likelihood estimate of the per-attempt overflow probability
+        the scheduler's capacity-schedule expectation model takes."""
+        if self.encoded_units <= 0:
+            return 0.0
+        return self.chunk_retries / self.encoded_units
 
 
 class DisaggregatedEngine:
@@ -101,6 +117,27 @@ class DisaggregatedEngine:
         """The resolved per-leaf routing table (empty before first transfer)."""
         return self.plan.describe() if self.plan is not None else "(no plan yet)"
 
+    def overflow_priors(self, bucket_tokens: int = 1024) -> Dict[int, float]:
+        """Per-bucket overflow priors from THIS engine's observed retries.
+
+        ``EngineStats.overflow_obs`` accumulates, per transferred cache
+        length, how many encoded units walked the capacity schedule and how
+        many needed at least one re-encode; bucketing those observations at
+        the scheduler's granularity yields the per-bucket per-attempt
+        overflow probability ``SchedulerConfig.overflow_priors`` feeds into
+        ``TransferPlan.estimate_time`` (ROADMAP: "per-bucket overflow
+        priors").  Buckets with no observations are simply absent — the
+        scheduler falls back to its scalar ``overflow_p`` for them."""
+        b = max(1, bucket_tokens)
+        agg: Dict[int, List[int]] = {}
+        for length, (units, retried) in self.stats.overflow_obs.items():
+            bucket = max(b, -(-length // b) * b)
+            acc = agg.setdefault(bucket, [0, 0])
+            acc[0] += units
+            acc[1] += retried
+        return {bucket: retried / units
+                for bucket, (units, retried) in agg.items() if units > 0}
+
     def scheduler_config(self, profile: Optional[CodecProfile] = None,
                          **overrides) -> "SchedulerConfig":
         """A :class:`~repro.serving.scheduler.SchedulerConfig` whose admission
@@ -109,14 +146,21 @@ class DisaggregatedEngine:
         object the session executes — the scheduler's numbers then flow
         through the real transfer path's plan), else per-bucket plans built
         from the engine's ``TransferConfig``.  ``profile`` defaults to the
-        engine's profile; any other ``SchedulerConfig`` field passes through
+        engine's profile; observed codec overflow feeds back as the
+        scheduler's expected-retry model (scalar ``overflow_p`` plus the
+        per-bucket ``overflow_priors`` when the engine has per-length
+        observations); any other ``SchedulerConfig`` field passes through
         ``overrides``."""
         from repro.serving.scheduler import SchedulerConfig
         kw = dict(profile=profile if profile is not None else self.profile,
                   plan=self.plan, transfer_config=self.tc,
                   compress=self.tc.enabled,
-                  n_chunks=max(1, self.tc.n_chunks))
+                  n_chunks=max(1, self.tc.n_chunks),
+                  overflow_p=self.stats.observed_overflow_p)
         kw.update(overrides)
+        if "overflow_priors" not in overrides and self.stats.overflow_obs:
+            kw["overflow_priors"] = self.overflow_priors(
+                kw.get("bucket_tokens", SchedulerConfig.bucket_tokens))
         return SchedulerConfig(**kw)
 
     # -- the three pipeline stages ------------------------------------------
@@ -147,6 +191,17 @@ class DisaggregatedEngine:
         self.stats.chunk_retries += cstats.n_retries
         self.stats.chunk_retry_steps += cstats.n_retry_steps
         self.stats.fp32_lo_wire_bytes += cstats.fp32_lo_wire_bytes
+        # overflow observations: units that walked the capacity schedule on
+        # this call, keyed by the transferred prompt length — the raw
+        # material for the scheduler's per-bucket overflow priors
+        units = len(cstats.chunk_retried)
+        if units:
+            self.stats.encoded_units += units
+            lens = jnp.asarray(state.cache_len)
+            length = int(jnp.max(lens)) if lens.size else 0
+            obs = self.stats.overflow_obs.setdefault(length, [0, 0])
+            obs[0] += units
+            obs[1] += cstats.n_retries
         if self.tc.n_chunks > 1:
             self.stats.chunk_wire_bytes.extend(cstats.chunk_wire_bytes)
         return DecodeState(cache=cache, cache_len=state.cache_len)

@@ -1,0 +1,168 @@
+"""Pluggable link/admission policies for the disaggregated scheduler.
+
+The PR-4 event engine made the PD link an explicit resource with a single
+dispatch point: when the link goes idle, ONE request is picked from the
+transfer queue and occupies it for exactly one interval.  That dispatch
+point is where service-aware ordering of compressed KV transfers lives —
+KVServe (arXiv 2605.13734) shows it materially shifts tail TTFT — and this
+module makes it pluggable without touching the event loop's accounting
+invariants (link conservation, single occupancy, deterministic tie-breaks).
+
+A policy answers two questions:
+
+1. **Link ordering** (:meth:`LinkPolicy.link_key`): given the requests
+   whose prefill has completed, which one gets the idle link next?  The
+   scheduler calls ``link_key(req, est_transfer_s, cfg)`` for every queued
+   request and dispatches the minimum.  Keys MUST end with ``req.rid`` so
+   ties break deterministically under any submission interleaving (the
+   event engine's determinism test covers every registered policy).
+2. **Speculative admission** (:attr:`LinkPolicy.speculative`): may the
+   request currently occupying the link pre-claim a free decode slot
+   *while its transfer is still in flight*?  This overlaps the decode-slot
+   wait with the transfer; the first token still cannot be produced before
+   ``transfer_done`` (the decode step loop skips slots whose transfer is
+   pending), and completed requests waiting in the admission queue always
+   have priority over a speculative claim, so admission never starves a
+   ready request.
+
+Built-in policies:
+
+``fifo``
+    Strict FIFO by prefill completion — the PR-4 default, bit-identical
+    to the pre-policy scheduler.
+``sjf``
+    Shortest-transfer-first: orders the link by the plan-estimated
+    transfer duration.  Lowers mean TTFT on mixed prompt lengths at the
+    cost of the longest transfers' tail (classic SJF trade, pinned by
+    ``tests/test_policy.py``).
+``edf``
+    Earliest-deadline-first on ``Request.deadline`` (fall back to
+    ``arrival + cfg.slo_s`` when the request carries none, and to FIFO
+    order when neither exists).  For simultaneously-released requests this
+    is Jackson's rule: it minimizes maximum lateness, so any set of
+    deadlines FIFO can meet, EDF meets too.
+``spec``
+    FIFO link ordering plus speculative decode admission (see above).
+
+Out-of-tree policies register with :func:`register_policy`; the scheduler
+resolves ``SchedulerConfig.policy`` through :func:`get_policy`, mirroring
+the codec-backend registry (:mod:`repro.core.backend`).
+
+Run ``python -m pydoc repro.serving.policy`` for this page.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING, Callable, Dict, Tuple
+
+if TYPE_CHECKING:  # only for annotations: scheduler imports this module
+    from repro.serving.scheduler import Request, SchedulerConfig
+
+
+class LinkPolicy:
+    """Abstract link/admission policy.  Subclasses set ``name`` and
+    override :meth:`link_key`; set ``speculative = True`` to enable
+    speculative decode admission (see the module docstring for the exact
+    semantics and invariants)."""
+
+    name: str = "abstract"
+    #: May the in-flight transfer pre-claim a free decode slot?
+    speculative: bool = False
+
+    def link_key(self, req: "Request", est_transfer_s: float,
+                 cfg: "SchedulerConfig") -> Tuple:
+        """Sort key for the idle-link dispatch: the queued request with the
+        MINIMUM key gets the link.  ``est_transfer_s`` is the plan-estimated
+        transfer duration for this request (``plan.estimate_time`` through
+        the scheduler's bucket/engine plan — the same charge the link will
+        actually take).  Keys must end with ``req.rid`` for determinism."""
+        raise NotImplementedError
+
+    def deadline_of(self, req: "Request", cfg: "SchedulerConfig") -> float:
+        """The effective deadline: the request's own, else ``arrival +
+        cfg.slo_s``, else +inf (no deadline pressure)."""
+        if req.deadline != math.inf:
+            return req.deadline
+        if cfg.slo_s is not None:
+            return req.arrival + cfg.slo_s
+        return math.inf
+
+
+class FifoPolicy(LinkPolicy):
+    """Strict FIFO by prefill completion (the PR-4 scheduler's behaviour)."""
+
+    name = "fifo"
+
+    def link_key(self, req, est_transfer_s, cfg):
+        return (req.prefill_done, req.rid)
+
+
+class ShortestTransferFirstPolicy(LinkPolicy):
+    """Shortest-transfer-first (SJF on the link): the queued request with
+    the smallest plan-estimated transfer duration goes next.  Mean/median
+    TTFT improves on mixed prompt lengths; the longest transfers pay the
+    tail (they can be overtaken while queued, never once on the link —
+    dispatch is non-preemptive)."""
+
+    name = "sjf"
+
+    def link_key(self, req, est_transfer_s, cfg):
+        return (est_transfer_s, req.prefill_done, req.rid)
+
+
+class EarliestDeadlinePolicy(LinkPolicy):
+    """SLO-aware EDF: order the link by effective deadline
+    (``Request.deadline``, else ``arrival + cfg.slo_s``).  Deadline ties
+    (including the no-deadline +inf case) fall back to FIFO order, so an
+    EDF scheduler with no deadlines anywhere degenerates to ``fifo``."""
+
+    name = "edf"
+
+    def link_key(self, req, est_transfer_s, cfg):
+        return (self.deadline_of(req, cfg), req.prefill_done, req.rid)
+
+
+class SpeculativeAdmissionPolicy(FifoPolicy):
+    """FIFO link ordering + speculative decode admission: the request
+    holding the link may claim a decode slot left over AFTER the admission
+    queue drains, so its slot wait overlaps its transfer.  Link accounting
+    is untouched — occupancy conservation holds bit-identically to FIFO
+    (pinned by ``tests/test_policy.py``)."""
+
+    name = "spec"
+    speculative = True
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors repro.core.backend)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], LinkPolicy]] = {}
+_INSTANCES: Dict[str, LinkPolicy] = {}
+
+
+def register_policy(name: str, factory: Callable[[], LinkPolicy]) -> None:
+    """Register a link/admission policy under ``name`` (later wins)."""
+    _REGISTRY[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def get_policy(name: str) -> LinkPolicy:
+    """Resolve a policy name to its (cached) instance."""
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown link policy {name!r}; available: {available_policies()}")
+    if name not in _INSTANCES:
+        _INSTANCES[name] = _REGISTRY[name]()
+    return _INSTANCES[name]
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_policy("fifo", FifoPolicy)
+register_policy("sjf", ShortestTransferFirstPolicy)
+register_policy("edf", EarliestDeadlinePolicy)
+register_policy("spec", SpeculativeAdmissionPolicy)

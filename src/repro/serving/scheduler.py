@@ -26,13 +26,29 @@ decode-step) over three resources:
 
 * **prefill worker** — batches up to ``max_prefill_batch`` arrived requests,
   one batch in flight at a time;
-* **transfer link** — strictly FIFO by prefill completion; each request
-  occupies the link EXACTLY once (``link_start`` .. ``transfer_done``),
-  regardless of how long it then waits for a decode slot;
+* **transfer link** — each request occupies the link EXACTLY once
+  (``link_start`` .. ``transfer_done``), regardless of how long it then
+  waits for a decode slot.  WHICH queued request gets the idle link is the
+  pluggable link policy (:mod:`repro.serving.policy` —
+  ``SchedulerConfig.policy``): strict FIFO by prefill completion (default),
+  shortest-transfer-first, SLO/deadline-aware EDF, or FIFO with speculative
+  decode admission.  Every policy preserves the single-occupancy and
+  conservation invariants; only the ordering (and, for ``spec``, the
+  admission overlap) changes.
 * **decode worker** — continuous batching in lockstep steps of
   ``decode_time_per_step``; transferred requests wait in an explicit
   admission queue until a slot is free AND join at a step boundary, so TTFT
-  reflects both link and decode-worker occupancy.
+  reflects both link and decode-worker occupancy.  Under the ``spec``
+  policy the request holding the link may pre-claim a decode slot left over
+  after the admission queue drains, overlapping its slot wait with its
+  transfer (tokens still never precede ``transfer_done``).
+
+Expected codec overflow is charged per prompt-length bucket:
+``overflow_priors`` (e.g. calibrated from a real engine's observed
+``EngineStats.chunk_retries`` via ``DisaggregatedEngine.overflow_priors``)
+overrides the scalar ``overflow_p`` bucket by bucket, and
+``TransferPlan.estimate_time`` walks the capacity schedule in expectation
+with that per-bucket prior.
 """
 
 from __future__ import annotations
@@ -50,6 +66,7 @@ from repro.core.codebook import DEFAULT_BF16_CODEBOOK
 from repro.core.pipeline import CodecProfile
 from repro.models.kvcache import init_cache
 from repro.serving.plan import TransferConfig, TransferPlan
+from repro.serving.policy import LinkPolicy, get_policy
 
 
 @dataclasses.dataclass
@@ -58,6 +75,9 @@ class Request:
     arrival: float
     prompt_len: int
     max_new_tokens: int
+    # TTFT deadline (absolute time) for deadline-aware policies; +inf means
+    # no SLO — the 'edf' policy then falls back to SchedulerConfig.slo_s
+    deadline: float = math.inf
     # filled in by the pipeline:
     prefill_done: float = -1.0
     link_start: float = -1.0         # single link occupancy: [link_start,
@@ -93,6 +113,22 @@ class SchedulerConfig:
     # geometric capacity schedule in expectation (extra encode attempts +
     # raw-fallback fraction at full link cost)
     overflow_p: float = 0.0
+    # per-bucket overflow priors (bucket tokens -> probability), overriding
+    # the scalar ``overflow_p`` for buckets they cover.  Calibrate from a
+    # real engine's observed retries: DisaggregatedEngine.overflow_priors()
+    overflow_priors: Optional[Dict[int, float]] = None
+    # link/admission policy registry key (repro.serving.policy):
+    # 'fifo' (default) | 'sjf' | 'edf' | 'spec'
+    policy: str = "fifo"
+    # default TTFT SLO (seconds after arrival) for deadline-aware policies
+    # when a Request carries no explicit deadline
+    slo_s: Optional[float] = None
+    # decode-slot setup cost (KV-block allocation, buffer pinning) paid
+    # between slot grant and the slot being decodable.  This is the wait a
+    # speculative policy overlaps with the transfer: a slot claimed during
+    # the transfer has its setup done by transfer_done, a slot granted at
+    # transfer_done pays it afterwards
+    admit_latency_s: float = 0.0
 
 
 # same-timestamp event ordering: complete work before starting new work
@@ -111,10 +147,14 @@ class DisaggregatedScheduler:
                 "SchedulerConfig.plan needs kv_bytes_per_token > 0 to scale "
                 "the plan's bytes to each request's prompt length")
         self.cfg = cfg
+        self.policy: LinkPolicy = get_policy(cfg.policy)
         # (sort-key, rid, Request) heaps: deterministic under any submission
-        # interleaving — ties always break on rid
+        # interleaving — ties always break on rid.  The transfer queue is a
+        # plain list: the link policy picks its minimum-key member at
+        # dispatch time (policy keys end with rid, so picks stay
+        # deterministic too).
         self.pending: List[Tuple[float, int, Request]] = []      # by arrival
-        self.xfer_queue: List[Tuple[float, int, Request]] = []   # by prefill_done
+        self.xfer_queue: List[Request] = []                      # policy-ordered
         self.admit_queue: List[Tuple[float, int, Request]] = []  # by transfer_done
         self.decoding: List[Request] = []
         self.done: List[Request] = []
@@ -124,7 +164,9 @@ class DisaggregatedScheduler:
         self._seq = 0
         self._prefill_busy = False
         self._link_busy = False
+        self._link_req: Optional[Request] = None   # in-flight transfer
         self._step_inflight = False
+        self._dur_cache: Dict[int, float] = {}     # prompt_len -> charge
 
     def submit(self, req: Request):
         # TTFT is defined by the first decoded token, so every served request
@@ -159,10 +201,26 @@ class DisaggregatedScheduler:
             self.plans[bucket] = plan
         return plan
 
+    def _overflow_prior(self, prompt_len: int) -> float:
+        """The expected per-attempt overflow probability for this request's
+        bucket: the per-bucket prior when one is calibrated (engine-observed
+        ``chunk_retries`` -> ``DisaggregatedEngine.overflow_priors``), else
+        the scalar ``overflow_p``."""
+        if self.cfg.overflow_priors:
+            return self.cfg.overflow_priors.get(self._bucket(prompt_len),
+                                                self.cfg.overflow_p)
+        return self.cfg.overflow_p
+
     def _transfer_duration(self, prompt_len: int) -> float:
         """One link occupancy, charged via ``plan.estimate_time``: flowshop
         over the plan's actual segments (chunked), additive (tensor), native
-        link cost (all-raw), with expected capacity-schedule retries."""
+        link cost (all-raw), with expected capacity-schedule retries under
+        the bucket's overflow prior.  Memoized per prompt length — link
+        policies (e.g. shortest-transfer-first) evaluate it for every queued
+        request at every dispatch."""
+        cached = self._dur_cache.get(prompt_len)
+        if cached is not None:
+            return cached
         p = self.cfg.profile
         if p is None:
             return 0.0
@@ -181,8 +239,10 @@ class DisaggregatedScheduler:
                          / plan.raw_bytes())
             else:
                 scale = prompt_len / bucket
-        return plan.estimate_time(p, scale=scale,
-                                  overflow_p=self.cfg.overflow_p)
+        dur = plan.estimate_time(p, scale=scale,
+                                 overflow_p=self._overflow_prior(prompt_len))
+        self._dur_cache[prompt_len] = dur
+        return dur
 
     # -- the event loop ------------------------------------------------------
     def _push(self, t: float, prio: int, payload: tuple) -> None:
@@ -211,6 +271,9 @@ class DisaggregatedScheduler:
         return self.done
 
     def _handle(self, t: float, payload: tuple) -> None:
+        """Complete one event: move the request to the next queue and free
+        the resource it held.  Resource (re)assignment happens afterwards in
+        :meth:`_dispatch`, once every same-timestamp event has drained."""
         kind = payload[0]
         if kind == "arrival":
             r = payload[1]
@@ -219,17 +282,42 @@ class DisaggregatedScheduler:
             self._prefill_busy = False
             for r in payload[1]:
                 r.prefill_done = t
-                heapq.heappush(self.xfer_queue, (t, r.rid, r))
+                self.xfer_queue.append(r)
         elif kind == "transfer_done":
             r = payload[1]
             r.transfer_done = t
             self._link_busy = False
-            heapq.heappush(self.admit_queue, (t, r.rid, r))
+            self._link_req = None
+            if r.admit_time < 0:
+                # speculatively admitted requests (policy 'spec') already
+                # hold their decode slot; everyone else queues for admission
+                heapq.heappush(self.admit_queue, (t, r.rid, r))
         elif kind == "decode_step":
             self._finish_step(t, payload[1])
 
+    def _next_for_link(self) -> Request:
+        """The link policy's pick: minimum ``link_key`` over the queued
+        requests (keys end with rid — deterministic under ties)."""
+        r = min(self.xfer_queue,
+                key=lambda q: self.policy.link_key(
+                    q, self._transfer_duration(q.prompt_len), self.cfg))
+        # remove by identity, not list.remove: Request is an eq-by-value
+        # dataclass, so two field-identical requests would otherwise have one
+        # dispatched twice and the other silently dropped
+        for i, q in enumerate(self.xfer_queue):
+            if q is r:
+                del self.xfer_queue[i]
+                break
+        return r
+
     def _dispatch(self, t: float) -> None:
-        """Start whatever each idle resource can pick up at time ``t``."""
+        """Start whatever each idle resource can pick up at time ``t``.
+
+        This is the policy's dispatch point: the idle link takes the
+        policy-minimal queued request, the decode worker drains the
+        admission queue into free slots (completed transfers always first),
+        and — only under a speculative policy — the in-flight transfer may
+        claim a slot that is STILL free after that drain."""
         if not self._prefill_busy and self.pending:
             batch = []
             while self.pending and len(batch) < self.cfg.max_prefill_batch:
@@ -239,29 +327,50 @@ class DisaggregatedScheduler:
             self._prefill_busy = True
             self._push(t + dur, _PRIO_PREFILL, ("prefill_done", batch))
         if not self._link_busy and self.xfer_queue:
-            r = heapq.heappop(self.xfer_queue)[2]
+            r = self._next_for_link()
             r.link_start = t
             dur = self._transfer_duration(r.prompt_len)
             self.link_busy_s += dur
             self._link_busy = True
+            self._link_req = r
             self._push(t + dur, _PRIO_TRANSFER, ("transfer_done", r))
         while self.admit_queue and len(self.decoding) < self.cfg.max_decode_slots:
             r = heapq.heappop(self.admit_queue)[2]
             r.admit_time = t
             self.decoding.append(r)
-        if self.decoding and not self._step_inflight:
+        if (self.policy.speculative and self._link_req is not None
+                and self._link_req.admit_time < 0
+                and len(self.decoding) < self.cfg.max_decode_slots):
+            # speculative admission: the transferring request pre-claims a
+            # LEFTOVER slot (never outranks a completed transfer above), so
+            # its decode-slot wait overlaps its transfer
+            r = self._link_req
+            r.admit_time = t
+            self.decoding.append(r)
+        # the decode worker only ticks when some slot can actually produce a
+        # token: a population of purely speculative slot-holders (transfers
+        # still in flight) must not start the lockstep clock early, or a
+        # misaligned step boundary would DELAY their first token
+        if (not self._step_inflight
+                and any(r.transfer_done >= 0 for r in self.decoding)):
             self._step_inflight = True
             self._push(t + self.cfg.decode_time_per_step, _PRIO_STEP,
                        ("decode_step", t))
 
     def _finish_step(self, t: float, step_start: float) -> None:
-        """One lockstep decode step [step_start, t] completed: every slot that
-        was admitted by step_start gains a token (later joiners start with the
-        next step); finished requests retire and free their slots."""
+        """One lockstep decode step [step_start, t] completed: every slot
+        that was READY by step_start gains a token — ready means the
+        transfer completed AND the slot's setup (``admit_latency_s`` after
+        the grant) finished.  Later joiners start with the next step;
+        speculative slot-holders whose transfer is still pending produce
+        nothing.  Finished requests retire and free their slots."""
         self._step_inflight = False
+        lat = self.cfg.admit_latency_s
         for r in list(self.decoding):
-            if r.admit_time > step_start:
-                continue
+            if r.admit_time > step_start or r.admit_time + lat > step_start:
+                continue   # not granted / slot setup still running
+            if r.transfer_done < 0 or r.transfer_done > step_start:
+                continue   # speculative hold: cache not on this worker yet
             r.tokens_out += 1
             if r.first_token_time < 0:
                 r.first_token_time = t

@@ -24,7 +24,11 @@ pipelined), ``transfer_cache_cross_pod`` (mesh) — as THIN SHIMS that build a
 one-shot plan and run it, so out-of-tree callers keep working; new code
 should hold a plan and reuse its session.  The analytic accounting
 (``transfer_report``, ``compressed_wire_bytes``, ``raw_wire_bytes``) also
-lives here.
+lives here; the :class:`~repro.core.pipeline.CodecProfile` it takes should
+come from :mod:`repro.core.profile` (calibrated ``profiles.json`` or the
+paper constants) rather than hand-entered throughput numbers — the
+scheduler itself charges transfers through ``TransferPlan.estimate_time``,
+not through anything in this module.
 
 Losslessness is unconditional on every path: escape-capacity overflow
 (``ok == False``) walks the plan's capacity schedule and then falls back to
