@@ -31,6 +31,16 @@ mean/p99 TTFT per policy next to the classic compressed-vs-native rows.
 Standalone: ``python -m benchmarks.fig2_e2e_serving [--policy sjf]``
 restricts the sweep to one policy (CI runs ``--policy sjf`` in smoke mode).
 
+``--chaos`` (ISSUE 7) runs the fault-injection smoke instead of the sweeps:
+a contended mixed-length trace on two decode workers under a seeded
+:class:`~repro.serving.faults.FaultPlan` — one decode worker killed mid-run,
+a link brownout over the middle of the trace, and deliberately-infeasible
+deadlines on part of the trace under the ``edf-shed`` policy.  Fault timing
+is derived from a fault-free dry run's measured makespan so the kill lands
+mid-run at ANY dilation.  The run must complete with every request terminal
+in exactly one state, nonzero shed AND failover counters, and conserved
+link accounting — CI fails otherwise.
+
 Expected: gains grow with sequence length as transfer dominates TTFT;
 slight slowdowns in the small-payload regime from fixed codec overheads;
 SJF trades the longest prompts' tail for mean TTFT on mixed traces.
@@ -47,6 +57,7 @@ import os
 from repro.configs.base import get_config
 from repro.core.profile import (PAPER_G_ENC, CalibratedProfile,
                                 resolve_calibration)
+from repro.serving.faults import FaultPlan, LinkBrownout, WorkerKill
 from repro.serving.plan import TransferPlan
 from repro.serving.policy import available_policies
 from repro.serving.scheduler import (DisaggregatedScheduler, Request,
@@ -128,6 +139,94 @@ def _run_policy(policy: str, profile, dil: float, n_requests: int) -> dict:
     return summarize(sched.run())
 
 
+def _chaos_trace(n: int, dil: float) -> list:
+    """Contended mixed-length trace where every 4th request carries a
+    provably-infeasible deadline (far below any possible transfer + decode
+    step), so ``edf-shed`` MUST shed it and serve the rest."""
+    lens = (65536, 1024, 8192, 2048)
+    reqs = []
+    for i in range(n):
+        r = Request(rid=i, arrival=i * 1e-3 * dil,
+                    prompt_len=lens[i % len(lens)], max_new_tokens=16)
+        if i % 4 == 3:
+            r.deadline = r.arrival + 1e-6 * dil
+        reqs.append(r)
+    return reqs
+
+
+def _chaos_sched(profile, dil: float, faults, heartbeat_s: float):
+    cfg = get_config("qwen3-32b")
+    return DisaggregatedScheduler(SchedulerConfig(
+        max_prefill_batch=4, arch=cfg,
+        prefill_time_per_token=1e-6 * dil,
+        decode_time_per_step=5e-3 * dil,
+        profile=profile, compress=True, policy="edf-shed",
+        n_decode_workers=2, faults=faults,
+        heartbeat_timeout_s=heartbeat_s))
+
+
+def run_chaos(emit) -> None:
+    """The fault-injection smoke: seeded chaos over the contended trace.
+
+    Raises (CI-fatal) unless the run completes with every request terminal
+    in exactly one of completed/shed/failed-over, nonzero shed AND failover
+    counters, and link accounting conserved across the failovers."""
+    profile, dil = _profile_and_dilation()
+    n = 16 if SMOKE else 64
+
+    # fault-free dry run: measure the trace's natural makespan so the
+    # brownout lands mid-run whatever the calibration dilation is
+    dry = _chaos_sched(profile, dil, None, heartbeat_s=1.0)
+    for r in _chaos_trace(n, dil):
+        dry.submit(r)
+    span = max(r.finish_time for r in dry.run())
+    brown = LinkBrownout(start=0.2 * span, stop=0.6 * span, factor=0.5)
+
+    # brownout-only rehearsal: the event engine is deterministic and a kill
+    # changes nothing before it fires, so this run's timing is IDENTICAL to
+    # the chaos run up to the kill — placing the kill (and its detection
+    # point) inside a decode-residency interval observed here guarantees a
+    # resident is caught on the dead worker, at any dilation
+    reh = _chaos_sched(profile, dil, FaultPlan(seed=7, brownouts=(brown,)),
+                       heartbeat_s=1.0)
+    for r in _chaos_trace(n, dil):
+        reh.submit(r)
+    occ = [(r.admit_time, r.finish_time) for r in reh.run()
+           if r.worker == 0 and r.state == "completed"]
+    assert occ, "rehearsal put no request on decode worker 0"
+    a, b = max(occ, key=lambda ab: ab[1] - ab[0])
+    heartbeat_s = (b - a) * 0.1             # detection at a + 0.35*(b-a) < b
+
+    plan = FaultPlan(
+        seed=7, corrupt_p=0.01,
+        worker_kills=(WorkerKill(worker=0, at=a + (b - a) * 0.25),),
+        brownouts=(brown,))
+    sched = _chaos_sched(profile, dil, plan, heartbeat_s=heartbeat_s)
+    for r in _chaos_trace(n, dil):
+        sched.submit(r)
+    done = sched.run()
+
+    assert len(done) == n, f"{n - len(done)} requests not terminal"
+    bad = [r.rid for r in done
+           if r.state not in ("completed", "shed", "failed-over")]
+    assert not bad, f"requests without terminal state: {bad}"
+    assert sched.sheds > 0, "chaos trace shed nothing"
+    assert sched.failovers > 0, "worker kill caused no failover"
+    ivals = sorted(i for r in done for i in r.link_history)
+    drift = abs(sched.link_busy_s - sum(b - a for a, b in ivals))
+    assert drift < 1e-9, f"link accounting drifted by {drift}"
+    assert all(b <= a + 1e-12 for (_, b), (a, _) in zip(ivals, ivals[1:])), \
+        "link occupancy intervals overlap"
+
+    out = summarize(done)
+    emit("fig2", "chaos", dict(
+        n=n, served=out["n"], n_shed=int(out["n_shed"]),
+        n_failed_over=int(out["n_failed_over"]),
+        n_retries=int(out["n_retries"]),
+        mean_ttft_ms=round(out["mean_ttft_s"] / dil * 1e3, 3),
+        link_conserved=1))
+
+
 def run(emit, policy: str | None = None) -> None:
     profile, dil = _profile_and_dilation()
     emit("fig2", "profile", dict(source=profile.source,
@@ -168,13 +267,19 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--policy", default=None, choices=available_policies(),
                     help="restrict the admission-policy sweep to one policy")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the seeded fault-injection smoke instead of "
+                         "the sweeps (asserts shed/failover counters)")
     args = ap.parse_args(argv)
 
     def emit(table: str, row: str, values: dict) -> None:
         kv = ",".join(f"{k}={v}" for k, v in values.items())
         print(f"{table},{row},{kv}", flush=True)
 
-    run(emit, policy=args.policy)
+    if args.chaos:
+        run_chaos(emit)
+    else:
+        run(emit, policy=args.policy)
 
 
 if __name__ == "__main__":

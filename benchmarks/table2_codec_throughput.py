@@ -185,6 +185,23 @@ def _planned_vs_legacy_transfer(x, cb, nbytes, repeats) -> dict:
         retries=stats.n_retries)
 
 
+def _wire_verify_overhead(x, cb, nbytes, repeats) -> dict:
+    """Checksum-frame verification cost on the production host path: the
+    same SZ02 payload decoded with per-frame Fletcher-32 verification on vs
+    off.  The delta is the receiver-side integrity tax the ``verify=`` knob
+    buys — the sender always writes the frames since SZ02, so encode pays
+    once unconditionally and only the decode choice is a knob."""
+    be = B.get_backend("wire")
+    bev = B.get_backend("wire-verify")
+    ct = be.encode(x, cb)
+    be.decode(ct); bev.decode(ct)           # warmup
+    t_off, _ = time_fn(lambda: be.decode(ct), repeats=repeats)
+    t_on, _ = time_fn(lambda: bev.decode(ct), repeats=repeats)
+    return dict(dec_gbps_verify_off=round(gbps(nbytes, t_off), 3),
+                dec_gbps_verify_on=round(gbps(nbytes, t_on), 3),
+                verify_overhead=round(t_on / max(t_off, 1e-12), 3))
+
+
 def run(emit) -> None:
     bits = _workload()
     nbytes = bits.nbytes
@@ -220,6 +237,10 @@ def run(emit) -> None:
     # --- planned vs legacy transfer (plan/execute API regression row) -------
     transfer_row = _planned_vs_legacy_transfer(x, cb, nbytes, repeats)
     emit("table2", "transfer-planned-vs-legacy", transfer_row)
+
+    # --- wire integrity: verified-decode overhead (ISSUE 7) -----------------
+    verify_row = _wire_verify_overhead(x, cb, nbytes, repeats)
+    emit("table2", "wire-verify-overhead", verify_row)
 
     # --- fused launch structure (the property the fusion exists for) --------
     structure = _launch_structure(x, cb)
@@ -293,6 +314,7 @@ def run(emit) -> None:
         "workload_elems": int(bits.size),
         "launch_structure": structure,
         "transfer": transfer_row,
+        "wire_verify": verify_row,
         "codecs": {r.name: dict(ratio=round(r.ratio, 4),
                                 enc_gbps=round(r.enc_gbps, 3),
                                 dec_gbps=round(r.dec_gbps, 3))

@@ -83,6 +83,20 @@ class CodecBackend:
         """Uncompressed bytes of the original tensor (the fallback cost)."""
         raise NotImplementedError
 
+    def checksum(self, comp: Any) -> int:
+        """Fletcher-32 integrity tag over the compressed object's host bytes.
+
+        This is the cheap per-chunk checksum the fault-tolerance layer
+        (:mod:`repro.serving.faults`) frames wire payloads with: computed by
+        the sender after encode, recomputed by the receiver before decode,
+        a mismatch routes the chunk through the retry machinery instead of
+        silently decoding garbage.  Leaf order is the pytree order, so the
+        tag is deterministic for a given compressed object."""
+        leaves = jax.tree_util.tree_leaves(comp)
+        return W.fletcher32(b"".join(
+            np.ascontiguousarray(np.asarray(leaf)).tobytes()
+            for leaf in leaves))
+
     def for_retry(self, layout: str) -> "CodecBackend":
         """Backend for the adaptive-capacity re-encode of an overflowed chunk.
 
@@ -208,10 +222,19 @@ class WireCompressed:
 
 
 class WireBackend(CodecBackend):
-    """Host numpy wire codec — byte-exact serialization, no capacity limit."""
+    """Host numpy wire codec — byte-exact serialization, no capacity limit.
+
+    ``verify=True`` checks every payload's integrity-frame table before
+    decoding (``repro.core.wire.decode(verify=True)``), raising
+    :class:`~repro.core.wire.WireIntegrityError` on corruption.  The verify
+    pass is one linear Fletcher-32 sweep; its cost is pinned as the
+    ``wire_verify`` row in ``BENCH_codec.json``."""
 
     name = "wire"
     jittable = False
+
+    def __init__(self, verify: bool = False):
+        self.verify = verify
 
     def encode(self, x, codebook, *, chunk=C.DEFAULT_CHUNK, cap=C.DEFAULT_CAP,
                layout="chunked"):
@@ -225,8 +248,12 @@ class WireBackend(CodecBackend):
                               stats=stats)
 
     def decode(self, comp: WireCompressed) -> jax.Array:
-        bits = jnp.asarray(W.decode(comp.payload)).reshape(comp.shape)
+        bits = jnp.asarray(W.decode(comp.payload, verify=self.verify)
+                           ).reshape(comp.shape)
         return C.from_bits(bits, jnp.dtype(comp.dtype))
+
+    def checksum(self, comp: WireCompressed) -> int:
+        return W.fletcher32(comp.payload)
 
     def ok(self, comp: WireCompressed) -> bool:
         return True  # variable-length format: unconditionally lossless
@@ -293,4 +320,7 @@ def _auto_backend() -> CodecBackend:
 register_backend("xla", XlaBackend)
 register_backend("pallas", PallasBackend)
 register_backend("wire", WireBackend)
+# integrity-checking wire decode: every payload's frame table is verified
+# before the body is parsed (WireIntegrityError on corruption)
+register_backend("wire-verify", lambda: WireBackend(verify=True))
 register_backend("auto", _auto_backend)

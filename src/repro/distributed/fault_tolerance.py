@@ -43,19 +43,43 @@ class FailureDetector:
     def heartbeat(self, worker_id: int, step_time: Optional[float] = None):
         w = self.workers[worker_id]
         w.last_heartbeat = self.clock()
+        # a renewed heartbeat REVIVES a worker previously declared dead (the
+        # process restarted, or the partition healed); consumers that cached
+        # a newly_dead() report see the revival on their next poll
+        w.alive = True
         if step_time is not None:
             w.step_times.append(step_time)
             if len(w.step_times) > self.cfg.straggler_window:
                 w.step_times.pop(0)
 
-    def dead_workers(self) -> List[int]:
+    def timed_out(self) -> List[int]:
+        """PURE detection: alive workers whose heartbeat has lapsed.  No
+        state changes — repeated calls agree until a heartbeat or a
+        :meth:`newly_dead` transition intervenes."""
         now = self.clock()
-        out = []
-        for w in self.workers.values():
-            if w.alive and now - w.last_heartbeat > self.cfg.heartbeat_timeout_s:
-                w.alive = False
-                out.append(w.worker_id)
+        return [w.worker_id for w in self.workers.values()
+                if w.alive
+                and now - w.last_heartbeat > self.cfg.heartbeat_timeout_s]
+
+    def newly_dead(self) -> List[int]:
+        """Detection + state transition: marks every timed-out worker dead
+        and returns them.  Each death is reported exactly once (until a
+        renewed heartbeat revives the worker)."""
+        out = self.timed_out()
+        for wid in out:
+            self.workers[wid].alive = False
         return out
+
+    def dead_workers(self) -> List[int]:
+        """ALL currently-dead workers (idempotent).  This used to mutate
+        ``alive`` as a detection side effect, so a second poll within one
+        timeout window returned [] and the caller believed the fleet had
+        healed; detection now lives in :meth:`timed_out`/:meth:`newly_dead`
+        and this is a pure view (lapsed heartbeats are swept in first so
+        single-method pollers still observe deaths)."""
+        self.newly_dead()
+        return sorted(w.worker_id for w in self.workers.values()
+                      if not w.alive)
 
     def stragglers(self) -> List[int]:
         med = self._median_step_time()

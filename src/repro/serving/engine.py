@@ -66,6 +66,12 @@ class EngineStats:
     # DisaggregatedEngine.overflow_priors() buckets these into the
     # scheduler's per-bucket overflow_p priors
     overflow_obs: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    # wire-integrity path (verify=True / faults= engines): checksum
+    # mismatches seen, re-fetches issued, and re-fetches that shipped raw
+    verify_failures: int = 0
+    refetches: int = 0
+    raw_refetches: int = 0
+    faults_injected: int = 0
 
     @property
     def transfer_ratio(self) -> float:
@@ -88,7 +94,8 @@ class DisaggregatedEngine:
                  *, compress: bool = True, chunk: int = 1024, cap: int = 64,
                  backend: str = "xla", n_chunks: int = 1,
                  compress_fp32: bool = False,
-                 profile: Optional[CodecProfile] = None):
+                 profile: Optional[CodecProfile] = None,
+                 verify: bool = False, faults=None):
         self.cfg = cfg
         self.params = params
         self.tc = T.TransferConfig(codebook=codebook, chunk=chunk, cap=cap,
@@ -96,6 +103,11 @@ class DisaggregatedEngine:
                                    n_chunks=n_chunks,
                                    compress_fp32=compress_fp32)
         self.profile = profile
+        # wire-integrity knobs, passed through to every TransferSession:
+        # verify=True checksum-verifies each wire hop (re-fetch on failure),
+        # faults injects a seeded FaultPlan (repro.serving.faults)
+        self.verify = verify
+        self.faults = faults
         self.stats = EngineStats()
         self._session: Optional[TransferSession] = None
 
@@ -106,7 +118,8 @@ class DisaggregatedEngine:
         ``plan.matches`` walk per call doubles as the session's structure
         validation (the transfer below passes ``check=False``)."""
         if self._session is None or not self._session.plan.matches(cache):
-            self._session = TransferPlan.build(cache, self.tc).session()
+            self._session = TransferPlan.build(cache, self.tc).session(
+                verify=self.verify, faults=self.faults)
         return self._session
 
     @property
@@ -191,6 +204,10 @@ class DisaggregatedEngine:
         self.stats.chunk_retries += cstats.n_retries
         self.stats.chunk_retry_steps += cstats.n_retry_steps
         self.stats.fp32_lo_wire_bytes += cstats.fp32_lo_wire_bytes
+        self.stats.verify_failures += cstats.verify_failures
+        self.stats.refetches += cstats.refetches
+        self.stats.raw_refetches += cstats.raw_refetches
+        self.stats.faults_injected += cstats.faults_injected
         # overflow observations: units that walked the capacity schedule on
         # this call, keyed by the transferred prompt length — the raw
         # material for the scheduler's per-bucket overflow priors

@@ -1,0 +1,332 @@
+"""Seeded, injectable fault plans for the transfer data plane.
+
+"Rethinking Key-Value Cache Compression Techniques" argues that happy-path,
+single-number evaluation is exactly where serving claims fall apart; this
+module makes every failure mode of the PD transfer path injectable and
+deterministic, so the fault-tolerance layer (wire integrity + re-fetch in
+:mod:`repro.serving.session`, worker failover + shedding in
+:mod:`repro.serving.scheduler`) is unit-testable on CPU.
+
+A :class:`FaultPlan` describes WHAT goes wrong:
+
+* **chunk faults** on the simulated wire — ``corrupt`` (bits flipped in the
+  shipped payload), ``drop`` (payload lost), ``delay`` (payload late) — both
+  as seeded rates (``corrupt_p``/``drop_p``) and as explicit per-chunk
+  injections (``corrupt_chunks=(2,)`` corrupts chunk 2 of every transfer's
+  first attempt);
+* **worker kills** — decode worker ``w`` dies at time ``t`` (optionally
+  revives), detected by the scheduler's
+  :class:`~repro.distributed.fault_tolerance.FailureDetector` after its
+  heartbeat timeout;
+* **link brownouts** — the PD link runs at ``factor`` of its bandwidth over
+  ``[start, stop)``.
+
+Randomized faults are drawn from a counter-based hash of ``(seed, uid,
+chunk, attempt)`` — NOT from stateful RNG — so a seeded plan is a pure
+function: the same transfer sees the same faults regardless of execution
+order, retries re-roll (attempt is part of the key), and two runs of one
+plan are bit-identical (pinned by ``tests/test_fault_tolerance.py``).
+
+Named plans register like codec backends and link policies
+(:func:`register_fault_plan` / :func:`get_fault_plan`); consumers accept
+``None | str | FaultPlan`` through :func:`resolve_faults`.  The built-in
+``chaos`` plan is the acceptance scenario: 1% chunk corruption, one decode
+worker killed mid-run, a link brownout interval.
+
+:class:`FaultChannel` is the execution-side companion: it frames chunk
+payloads with a Fletcher-32 checksum at ship time, applies the plan's chunk
+faults, and verifies frames at delivery — the piece
+:class:`~repro.serving.session.TransferSession` threads its wire hop
+through.
+
+Run ``python -m pydoc repro.serving.faults`` for this page.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core.backend import WireCompressed
+from repro.core.wire import fletcher32
+
+# ---------------------------------------------------------------------------
+# deterministic per-(seed, uid, chunk, attempt) randomness
+# ---------------------------------------------------------------------------
+
+_SPLITMIX_GAMMA = 0x9E3779B97F4A7C15
+_MASK64 = (1 << 64) - 1
+
+
+def _splitmix64(x: int) -> int:
+    """One splitmix64 scramble round — the counter-based hash behind every
+    randomized fault draw (stateless, so fault plans are pure functions)."""
+    x = (x + _SPLITMIX_GAMMA) & _MASK64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _MASK64
+    return (x ^ (x >> 31)) & _MASK64
+
+
+def _unit_draw(seed: int, uid: int, chunk: int, attempt: int, salt: int) -> float:
+    """Uniform [0, 1) draw keyed by the full fault coordinate."""
+    h = seed & _MASK64
+    for part in (uid, chunk, attempt, salt):
+        h = _splitmix64(h ^ (part & _MASK64))
+    return h / float(1 << 64)
+
+
+# ---------------------------------------------------------------------------
+# fault descriptors
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WorkerKill:
+    """Decode worker ``worker`` stops heartbeating at ``at`` (sim seconds);
+    ``revive_at`` restores it (None == permanent death)."""
+
+    worker: int
+    at: float
+    revive_at: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkBrownout:
+    """The PD link delivers at ``factor`` (0 < factor <= 1) of its nominal
+    bandwidth over ``[start, stop)`` — congestion, not an outage."""
+
+    start: float
+    stop: float
+    factor: float = 0.5
+
+    def __post_init__(self):
+        if not (0.0 < self.factor <= 1.0):
+            raise ValueError("brownout factor must be in (0, 1]")
+        if self.stop <= self.start:
+            raise ValueError("brownout interval must be non-empty")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, declarative description of what goes wrong.
+
+    Chunk-fault resolution order for transfer ``uid``, chunk ``i``, attempt
+    ``a``: explicit injections first (``corrupt_chunks``/``drop_chunks``/
+    ``delay_chunks`` — attempt 0 only, so a single re-fetch clears them,
+    unless ``persistent_attempts`` extends them), then the seeded rates
+    (re-rolled per attempt).  ``max_attempt`` caps randomized faults so an
+    adversarial rate cannot starve the terminal raw re-fetch forever."""
+
+    seed: int = 0
+    # seeded chunk-fault rates (per chunk, per attempt)
+    corrupt_p: float = 0.0
+    drop_p: float = 0.0
+    delay_p: float = 0.0
+    delay_s: float = 0.0                 # injected latency per delayed chunk
+    # explicit injections: chunk indices faulted on attempts < persistent_attempts
+    corrupt_chunks: Tuple[int, ...] = ()
+    drop_chunks: Tuple[int, ...] = ()
+    delay_chunks: Tuple[int, ...] = ()
+    persistent_attempts: int = 1
+    # randomized faults stop at this attempt (the raw re-fetch must be able
+    # to terminate; explicit injections are bounded by persistent_attempts)
+    max_attempt: int = 8
+    # scheduler-plane faults
+    worker_kills: Tuple[WorkerKill, ...] = ()
+    brownouts: Tuple[LinkBrownout, ...] = ()
+
+    # -- chunk faults --------------------------------------------------------
+    def chunk_fault(self, uid: int, chunk: int, attempt: int) -> Optional[str]:
+        """'corrupt' | 'drop' | 'delay' | None for this fault coordinate."""
+        if attempt < self.persistent_attempts:
+            if chunk in self.corrupt_chunks:
+                return "corrupt"
+            if chunk in self.drop_chunks:
+                return "drop"
+            if chunk in self.delay_chunks:
+                return "delay"
+        if attempt >= self.max_attempt:
+            return None
+        if (self.corrupt_p > 0.0
+                and _unit_draw(self.seed, uid, chunk, attempt, 1) < self.corrupt_p):
+            return "corrupt"
+        if (self.drop_p > 0.0
+                and _unit_draw(self.seed, uid, chunk, attempt, 2) < self.drop_p):
+            return "drop"
+        if (self.delay_p > 0.0
+                and _unit_draw(self.seed, uid, chunk, attempt, 3) < self.delay_p):
+            return "delay"
+        return None
+
+    # -- link faults ---------------------------------------------------------
+    def link_rate(self, t: float) -> float:
+        """Fractional link bandwidth at sim time ``t`` (1.0 == nominal).
+        Overlapping brownouts compound multiplicatively."""
+        rate = 1.0
+        for b in self.brownouts:
+            if b.start <= t < b.stop:
+                rate *= b.factor
+        return rate
+
+    def link_wall_clock(self, start: float, busy_s: float) -> float:
+        """Wall-clock completion time of a transfer needing ``busy_s``
+        seconds of NOMINAL link time when dispatched at ``start``: integrates
+        the brownout-degraded rate piecewise, so the occupancy interval the
+        scheduler charges is exactly the wall clock the link was held."""
+        if busy_s <= 0.0:
+            return start
+        edges = sorted({e for b in self.brownouts
+                        for e in (b.start, b.stop) if e > start})
+        t, left = start, busy_s
+        for edge in edges:
+            rate = self.link_rate(t)
+            span = edge - t
+            if left <= span * rate:
+                return t + left / rate
+            left -= span * rate
+            t = edge
+        return t + left / self.link_rate(t)
+
+    def describe(self) -> str:
+        parts = []
+        if self.corrupt_p or self.corrupt_chunks:
+            parts.append(f"corrupt(p={self.corrupt_p}, "
+                         f"chunks={self.corrupt_chunks})")
+        if self.drop_p or self.drop_chunks:
+            parts.append(f"drop(p={self.drop_p}, chunks={self.drop_chunks})")
+        if self.delay_p or self.delay_chunks:
+            parts.append(f"delay(p={self.delay_p}, +{self.delay_s}s)")
+        parts.extend(f"kill(w{k.worker}@{k.at}"
+                     + (f", revive@{k.revive_at})" if k.revive_at is not None
+                        else ")") for k in self.worker_kills)
+        parts.extend(f"brownout([{b.start},{b.stop}) x{b.factor})"
+                     for b in self.brownouts)
+        return f"FaultPlan[seed={self.seed}: " + (", ".join(parts) or "none") + "]"
+
+
+# ---------------------------------------------------------------------------
+# the checksum-framed wire hop
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Frame:
+    """One chunk payload on the simulated wire: the (possibly fault-mutated)
+    compressed object plus the Fletcher-32 tag the SENDER computed over the
+    pristine payload.  ``payload is None`` == dropped in flight."""
+
+    payload: object
+    tag: int
+    delay_s: float = 0.0
+
+
+def _corrupt_payload(payload, salt: int):
+    """Flip one bit in the payload's first array leaf (or payload bytes for
+    host wire objects) — the smallest corruption a checksum must catch."""
+    if isinstance(payload, WireCompressed):
+        buf = bytearray(payload.payload)
+        pos = _splitmix64(salt) % max(1, len(buf))
+        buf[pos] ^= 1 << (_splitmix64(salt + 1) % 8)
+        return dataclasses.replace(payload, payload=bytes(buf))
+    leaves, treedef = jax.tree_util.tree_flatten(payload)
+    arrays = [i for i, leaf in enumerate(leaves) if np.asarray(leaf).size > 0]
+    if not arrays:
+        return payload
+    # hit the LARGEST leaf: compressed objects carry capacity-padded escape
+    # arrays whose dead tail would absorb the flip without observable effect
+    i = max(arrays, key=lambda j: np.asarray(leaves[j]).nbytes)
+    host = np.array(np.asarray(leaves[i]))            # writable copy
+    flat = host.reshape(-1).view(np.uint8)
+    pos = _splitmix64(salt + 1) % flat.size
+    flat[pos] ^= np.uint8(1 << (_splitmix64(salt + 2) % 8))
+    leaves[i] = type(leaves[i])(host) if isinstance(leaves[i], np.ndarray) \
+        else jax.numpy.asarray(host)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class FaultChannel:
+    """The simulated wire between prefill and decode: frames chunk payloads
+    with a checksum, applies a :class:`FaultPlan`'s chunk faults in flight,
+    and verifies frames on delivery.
+
+    With ``plan=None`` the channel is transparent (checksum framing only),
+    so the verify path is exercisable without any injected fault."""
+
+    def __init__(self, checksum: Callable[[object], int],
+                 plan: Optional[FaultPlan] = None):
+        self.checksum = checksum
+        self.plan = plan
+        self.injected = 0            # faults applied on this channel
+        self.injected_delay_s = 0.0
+
+    def ship(self, payload, uid: int, chunk: int, attempt: int) -> Frame:
+        """Sender side: tag the pristine payload, then let the plan mutate
+        it in flight."""
+        tag = self.checksum(payload)
+        delay = 0.0
+        if self.plan is not None:
+            fault = self.plan.chunk_fault(uid, chunk, attempt)
+            if fault == "corrupt":
+                salt = (self.plan.seed << 8) ^ _splitmix64(
+                    (uid << 20) ^ (chunk << 8) ^ attempt)
+                payload = _corrupt_payload(payload, salt)
+                self.injected += 1
+            elif fault == "drop":
+                payload = None
+                self.injected += 1
+            elif fault == "delay":
+                delay = self.plan.delay_s
+                self.injected += 1
+                self.injected_delay_s += delay
+        return Frame(payload=payload, tag=tag, delay_s=delay)
+
+    def deliver(self, frame: Frame) -> Tuple[object, bool]:
+        """Receiver side: ``(payload, intact)``.  A dropped frame or a tag
+        mismatch is NOT an error here — the session routes it through the
+        retry machinery; this only refuses to hand garbage up unlabeled."""
+        if frame.payload is None:
+            return None, False
+        return frame.payload, self.checksum(frame.payload) == frame.tag
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors repro.core.backend / repro.serving.policy)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], FaultPlan]] = {}
+
+
+def register_fault_plan(name: str, factory: Callable[[], FaultPlan]) -> None:
+    """Register a named fault plan (later wins)."""
+    _REGISTRY[name] = factory
+
+
+def get_fault_plan(name: str) -> FaultPlan:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown fault plan {name!r}; "
+                       f"available: {available_fault_plans()}")
+    return _REGISTRY[name]()
+
+
+def available_fault_plans() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_faults(faults: Union[None, str, FaultPlan]) -> Optional[FaultPlan]:
+    """``None | registry name | FaultPlan`` -> the plan (None == fault-free)."""
+    if faults is None or isinstance(faults, FaultPlan):
+        return faults
+    return get_fault_plan(faults)
+
+
+# the acceptance scenario (ISSUE 7): 1% of chunks corrupted, one decode
+# worker killed mid-run, the link browned out over an interval.  Times are
+# in the dilated sim regime fig2 runs (seconds-scale traces).
+register_fault_plan("chaos", lambda: FaultPlan(
+    seed=7, corrupt_p=0.01,
+    worker_kills=(WorkerKill(worker=1, at=0.35),),
+    brownouts=(LinkBrownout(start=0.2, stop=0.6, factor=0.5),)))
+# wire-integrity stress: heavy corruption + drops, every failure recoverable
+register_fault_plan("lossy-wire", lambda: FaultPlan(
+    seed=11, corrupt_p=0.2, drop_p=0.05))

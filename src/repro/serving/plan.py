@@ -170,12 +170,24 @@ class TransferStats:
     fp32_lo_wire_bytes: float = 0.0
     # fp8 route: sidecar-encoded float8 leaves' wire bytes
     fp8_wire_bytes: float = 0.0
+    # wire-integrity path (verify=True sessions / injected faults): checksum
+    # mismatches + drops observed, re-fetches issued, re-fetches that shipped
+    # the unit's raw bits, and the extra bytes those re-fetches put on the
+    # wire (chunk_*/leaf_* keep their first-ship meaning)
+    verify_failures: int = 0
+    refetches: int = 0
+    raw_refetches: int = 0
+    refetch_wire_bytes: float = 0.0
+    # injected-fault bookkeeping (FaultChannel): faults applied this call and
+    # wire latency added by 'delay' faults
+    faults_injected: int = 0
+    fault_delay_s: float = 0.0
 
     @property
     def wire_bytes(self) -> float:
         return (sum(self.chunk_wire_bytes) + sum(self.leaf_wire_bytes.values())
                 + self.raw_passthrough_bytes + self.fp32_lo_wire_bytes
-                + self.fp8_wire_bytes)
+                + self.fp8_wire_bytes + self.refetch_wire_bytes)
 
     @property
     def all_ok(self) -> bool:
@@ -472,6 +484,9 @@ class TransferPlan:
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
     # -- session -------------------------------------------------------------
-    def session(self) -> "TransferSession":
+    def session(self, *, faults=None, verify: bool = False) -> "TransferSession":
+        """``faults`` is ``None | registry name | FaultPlan`` (see
+        :mod:`repro.serving.faults`); ``verify=True`` checksum-verifies every
+        wire hop and routes failures through the capacity-retry machinery."""
         from repro.serving.session import TransferSession
-        return TransferSession(self)
+        return TransferSession(self, faults=faults, verify=verify)

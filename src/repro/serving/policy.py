@@ -41,6 +41,12 @@ Built-in policies:
     order when neither exists).  For simultaneously-released requests this
     is Jackson's rule: it minimizes maximum lateness, so any set of
     deadlines FIFO can meet, EDF meets too.
+``edf-shed``
+    EDF plus overload shedding: queued requests that provably cannot meet
+    their deadline (immediate dispatch would still land past it) are
+    dropped at the dispatch point with terminal state ``'shed'`` instead
+    of burning link time on a guaranteed SLO miss.  The shed set is
+    minimal — only requests no work-conserving policy could save.
 ``spec``
     FIFO link ordering plus speculative decode admission (see above).
 
@@ -69,6 +75,11 @@ class LinkPolicy:
     name: str = "abstract"
     #: May the in-flight transfer pre-claim a free decode slot?
     speculative: bool = False
+    #: Shed queued requests that provably cannot meet their deadline?  The
+    #: scheduler drops such requests at the link dispatch point (terminal
+    #: state 'shed') instead of burning link time on a guaranteed SLO miss;
+    #: ``SchedulerConfig.shed_infeasible`` overrides this default either way.
+    sheds: bool = False
 
     def link_key(self, req: "Request", est_transfer_s: float,
                  cfg: "SchedulerConfig") -> Tuple:
@@ -123,6 +134,19 @@ class EarliestDeadlinePolicy(LinkPolicy):
         return (self.deadline_of(req, cfg), req.prefill_done, req.rid)
 
 
+class SheddingEDFPolicy(EarliestDeadlinePolicy):
+    """EDF link ordering + overload shedding: queued requests whose deadline
+    is provably infeasible (even an IMMEDIATE dispatch — transfer now, first
+    decode step right after — would land past it) are shed at the dispatch
+    point.  Because only provably-lost requests are dropped, the shed set is
+    minimal: every request this policy sheds misses its deadline under ANY
+    work-conserving policy, and the link time it frees can only help the
+    survivors (pinned against FIFO by ``tests/test_fault_tolerance.py``)."""
+
+    name = "edf-shed"
+    sheds = True
+
+
 class SpeculativeAdmissionPolicy(FifoPolicy):
     """FIFO link ordering + speculative decode admission: the request
     holding the link may claim a decode slot left over AFTER the admission
@@ -165,4 +189,5 @@ def available_policies() -> Tuple[str, ...]:
 register_policy("fifo", FifoPolicy)
 register_policy("sjf", ShortestTransferFirstPolicy)
 register_policy("edf", EarliestDeadlinePolicy)
+register_policy("edf-shed", SheddingEDFPolicy)
 register_policy("spec", SpeculativeAdmissionPolicy)

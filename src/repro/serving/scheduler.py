@@ -43,6 +43,29 @@ decode-step) over three resources:
   after the admission queue drains, overlapping its slot wait with its
   transfer (tokens still never precede ``transfer_done``).
 
+**Failure semantics** (ISSUE 7): the decode side is a FLEET of
+``n_decode_workers`` sharing the slot budget, watched by the same
+:class:`~repro.distributed.fault_tolerance.FailureDetector` the training
+plane uses (driven by the sim clock — live workers heartbeat at every
+event, so deaths surface with real ``heartbeat_timeout_s`` detection
+latency).  A :class:`~repro.serving.faults.FaultPlan`
+(``SchedulerConfig.faults``) injects worker kills and link brownouts:
+
+* a dead worker's resident requests **fail over** — the compressed cache is
+  re-sent (a fresh, conserved link occupancy charged via
+  ``plan.estimate_time``) after a capped exponential backoff and re-admitted
+  on a surviving worker, keeping tokens already emitted; each request's
+  ``link_history`` records every occupancy so conservation stays checkable
+  across failures, and exhausted failover budgets shed loudly;
+* a **brownout** stretches in-flight transfers to the piecewise-integrated
+  wall clock of the degraded link rate (occupancy = what the link was held);
+* shedding-enabled policies (``'edf-shed'``, or ``shed_infeasible=True``)
+  drop queued requests that PROVABLY cannot meet their deadline.
+
+Every request drains terminal in exactly one state — ``'completed'``,
+``'failed-over'``, or ``'shed'`` — and :func:`summarize` reports the
+failure-plane counts next to the latency statistics.
+
 Expected codec overflow is charged per prompt-length bucket:
 ``overflow_priors`` (e.g. calibrated from a real engine's observed
 ``EngineStats.chunk_retries`` via ``DisaggregatedEngine.overflow_priors``)
@@ -56,7 +79,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +87,9 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core.codebook import DEFAULT_BF16_CODEBOOK
 from repro.core.pipeline import CodecProfile
+from repro.distributed.fault_tolerance import FailureDetector, FaultConfig
 from repro.models.kvcache import init_cache
+from repro.serving.faults import FaultPlan, resolve_faults
 from repro.serving.plan import TransferConfig, TransferPlan
 from repro.serving.policy import LinkPolicy, get_policy
 
@@ -86,6 +111,21 @@ class Request:
     first_token_time: float = -1.0   # TTFT
     finish_time: float = -1.0
     tokens_out: int = 0
+    # --- failure semantics (ISSUE 7) ---
+    # terminal state, set exactly once when the request leaves the system:
+    # 'completed' (served, no failover), 'failed-over' (served, but at least
+    # one decode-worker death forced a cache re-fetch), 'shed' (dropped —
+    # deadline provably infeasible, or failover budget exhausted)
+    state: str = ""
+    worker: int = -1                 # decode-worker assignment (-1: none yet)
+    failovers: int = 0               # decode-worker deaths survived
+    retries: int = 0                 # re-fetch transfers dispatched
+    # EVERY link occupancy this request was charged, [link_start,
+    # transfer_done) per element — failover re-fetches append here, so
+    # conservation (link_busy_s == sum of all intervals, intervals pairwise
+    # disjoint) stays checkable across failures
+    link_history: List[Tuple[float, float]] = dataclasses.field(
+        default_factory=list)
 
 
 @dataclasses.dataclass
@@ -129,6 +169,30 @@ class SchedulerConfig:
     # the transfer has its setup done by transfer_done, a slot granted at
     # transfer_done pays it afterwards
     admit_latency_s: float = 0.0
+    # --- failure semantics (ISSUE 7) ---
+    # decode workers sharing max_decode_slots (ceil-split per worker); a
+    # worker's death fails its resident requests over to the survivors
+    n_decode_workers: int = 1
+    # injected fault plan: None | registry name | FaultPlan
+    # (repro.serving.faults) — worker kills and link brownouts act here;
+    # chunk-level faults act in the TransferSession execution path
+    faults: Union[None, str, FaultPlan] = None
+    # decode-worker heartbeat lapse after which the FailureDetector declares
+    # the worker dead (failure DETECTION latency: requests on a killed
+    # worker keep "decoding" until detection, exactly as deployed)
+    heartbeat_timeout_s: float = 0.05
+    # capped exponential backoff between a detected failure and the re-fetch
+    # dispatch: retry k waits min(retry_backoff_s * 2**(k-1),
+    # retry_backoff_max_s)
+    retry_backoff_s: float = 0.01
+    retry_backoff_max_s: float = 1.0
+    # failover budget: a request whose worker dies more than this many times
+    # is shed instead of retried forever
+    max_refetches: int = 4
+    # overload shedding of deadline-infeasible queued requests: None defers
+    # to the policy's ``sheds`` default ('edf-shed' sheds, others don't);
+    # True/False forces it either way
+    shed_infeasible: Optional[bool] = None
 
 
 # same-timestamp event ordering: complete work before starting new work
@@ -148,6 +212,7 @@ class DisaggregatedScheduler:
                 "the plan's bytes to each request's prompt length")
         self.cfg = cfg
         self.policy: LinkPolicy = get_policy(cfg.policy)
+        self.faults: Optional[FaultPlan] = resolve_faults(cfg.faults)
         # (sort-key, rid, Request) heaps: deterministic under any submission
         # interleaving — ties always break on rid.  The transfer queue is a
         # plain list: the link policy picks its minimum-key member at
@@ -160,6 +225,10 @@ class DisaggregatedScheduler:
         self.done: List[Request] = []
         self.plans: Dict[int, TransferPlan] = {}   # bucket tokens -> plan
         self.link_busy_s = 0.0                     # total charged link time
+        # failure counters (surfaced by summarize via the done list too)
+        self.sheds = 0
+        self.failovers = 0
+        self.retries = 0
         self._events: List[Tuple[float, int, int, tuple]] = []
         self._seq = 0
         self._prefill_busy = False
@@ -167,6 +236,27 @@ class DisaggregatedScheduler:
         self._link_req: Optional[Request] = None   # in-flight transfer
         self._step_inflight = False
         self._dur_cache: Dict[int, float] = {}     # prompt_len -> charge
+        # decode-worker fleet health: the SAME FailureDetector the training
+        # plane uses (distributed/fault_tolerance.py), driven by the sim
+        # clock.  Workers heartbeat at every event unless a FaultPlan kill
+        # has them down; deaths surface through newly_dead() with real
+        # detection latency (heartbeat_timeout_s)
+        self._now = 0.0
+        self.detector = FailureDetector(
+            max(1, cfg.n_decode_workers),
+            FaultConfig(heartbeat_timeout_s=cfg.heartbeat_timeout_s),
+            clock=lambda: self._now)
+        if self.faults is not None:
+            eps = max(1e-9, cfg.heartbeat_timeout_s * 1e-6)
+            for k in self.faults.worker_kills:
+                if k.worker >= max(1, cfg.n_decode_workers):
+                    continue
+                # wake events guarantee the death is detected (and the
+                # revival observed) even across an otherwise-idle heap
+                self._push(k.at + cfg.heartbeat_timeout_s + eps,
+                           _PRIO_ARRIVAL, ("wake",))
+                if k.revive_at is not None:
+                    self._push(k.revive_at, _PRIO_ARRIVAL, ("wake",))
 
     def submit(self, req: Request):
         # TTFT is defined by the first decoded token, so every served request
@@ -250,25 +340,130 @@ class DisaggregatedScheduler:
         self._seq += 1
 
     def run(self) -> List[Request]:
-        """Drain all submitted requests; returns them with timings filled."""
+        """Drain all submitted requests; returns them with timings filled.
+        Every returned request is terminal in exactly one state:
+        ``'completed'``, ``'failed-over'`` (served despite a decode-worker
+        death), or ``'shed'`` (dropped — infeasible deadline or exhausted
+        failover budget)."""
         while self._events:
             t = self._events[0][0]
+            self._now = t
+            # fleet health first: live workers heartbeat at every event
+            # time, so the detector's view lags reality by at most the
+            # heartbeat timeout — real detection latency, simulated
+            self._heartbeat_alive(t)
             # complete EVERY event at this timestamp before dispatching new
             # work, so resource assignment never depends on heap-push order
             while self._events and self._events[0][0] == t:
                 payload = heapq.heappop(self._events)[3]
                 self._handle(t, payload)
+            for wid in self.detector.newly_dead():
+                self._on_worker_death(t, wid)
             self._dispatch(t)
         stranded = (len(self.pending) + len(self.xfer_queue)
                     + len(self.admit_queue) + len(self.decoding))
         if stranded:
-            # e.g. max_decode_slots == 0: admission can never happen and the
-            # event heap drains with requests still queued — fail loudly
-            # instead of returning a silently partial done list
+            # e.g. max_decode_slots == 0 or every decode worker permanently
+            # dead: admission can never happen and the event heap drains
+            # with requests still queued — fail loudly instead of returning
+            # a silently partial done list
             raise RuntimeError(
                 f"{stranded} request(s) never completed (check "
-                "max_decode_slots/max_prefill_batch > 0)")
+                "max_decode_slots/max_prefill_batch > 0 and that at least "
+                "one decode worker survives the fault plan)")
         return self.done
+
+    # -- decode-worker fleet -------------------------------------------------
+    def _worker_down(self, wid: int, t: float) -> bool:
+        """Is worker ``wid`` kill-silenced (not heartbeating) at ``t``?"""
+        if self.faults is None:
+            return False
+        return any(k.worker == wid and k.at <= t
+                   and (k.revive_at is None or t < k.revive_at)
+                   for k in self.faults.worker_kills)
+
+    def _heartbeat_alive(self, t: float) -> None:
+        for wid in self.detector.workers:
+            if not self._worker_down(wid, t):
+                self.detector.heartbeat(wid)
+
+    def _slots_per_worker(self) -> int:
+        n = max(1, self.cfg.n_decode_workers)
+        return -(-self.cfg.max_decode_slots // n)
+
+    def _pick_worker(self) -> Optional[int]:
+        """Least-loaded ALIVE decode worker with a free slot (ties break to
+        the lowest id), respecting the global ``max_decode_slots`` budget.
+        None when no worker can take a request right now."""
+        if len(self.decoding) >= self.cfg.max_decode_slots:
+            return None
+        per = self._slots_per_worker()
+        loads = {w.worker_id: 0 for w in self.detector.workers.values()
+                 if w.alive}
+        for r in self.decoding:
+            if r.worker in loads:
+                loads[r.worker] += 1
+        cands = [(load, wid) for wid, load in loads.items() if load < per]
+        return min(cands)[1] if cands else None
+
+    def _on_worker_death(self, t: float, wid: int) -> None:
+        """Decode worker ``wid`` declared dead: its resident decode state is
+        gone.  Requests whose transfer had completed FAIL OVER — their
+        compressed cache is re-sent (a fresh link occupancy at the same
+        ``plan.estimate_time`` charge) after a capped exponential backoff,
+        then re-admitted on a surviving worker; tokens already emitted are
+        kept (they were already streamed).  Speculative slot-holders merely
+        lose the slot (their cache never landed here).  A request whose
+        failover budget is exhausted is shed — terminal, never silent."""
+        for r in list(self.decoding):
+            if r.worker != wid:
+                continue
+            self.decoding.remove(r)
+            r.worker = -1
+            if r.transfer_done < 0:          # speculative hold: no cache lost
+                r.admit_time = -1.0
+                continue
+            r.failovers += 1
+            self.failovers += 1
+            if r.failovers > self.cfg.max_refetches:
+                self._shed(t, r)
+                continue
+            backoff = min(self.cfg.retry_backoff_s * 2.0 ** (r.failovers - 1),
+                          self.cfg.retry_backoff_max_s)
+            r.retries += 1
+            self.retries += 1
+            r.admit_time = -1.0
+            r.transfer_done = -1.0
+            r.link_start = -1.0
+            self._push(t + backoff, _PRIO_ARRIVAL, ("refetch", r))
+
+    def _shed_enabled(self) -> bool:
+        if self.cfg.shed_infeasible is not None:
+            return self.cfg.shed_infeasible
+        return self.policy.sheds
+
+    def _shed(self, t: float, r: Request) -> None:
+        r.state = "shed"
+        r.finish_time = t
+        self.sheds += 1
+        self.done.append(r)
+
+    def _shed_infeasible(self, t: float) -> None:
+        """Drop queued requests that PROVABLY cannot meet their deadline:
+        even dispatching right now — nominal transfer, then one decode step
+        — lands past it.  Only guaranteed losses are shed, so the shed set
+        is minimal (any work-conserving policy misses exactly these) and
+        the freed link time can only help the survivors."""
+        keep = []
+        for r in self.xfer_queue:
+            dl = self.policy.deadline_of(r, self.cfg)
+            if (dl != math.inf
+                    and t + self._transfer_duration(r.prompt_len)
+                    + self.cfg.decode_time_per_step > dl):
+                self._shed(t, r)
+            else:
+                keep.append(r)
+        self.xfer_queue = keep
 
     def _handle(self, t: float, payload: tuple) -> None:
         """Complete one event: move the request to the next queue and free
@@ -286,14 +481,21 @@ class DisaggregatedScheduler:
         elif kind == "transfer_done":
             r = payload[1]
             r.transfer_done = t
+            r.link_history.append((r.link_start, t))
             self._link_busy = False
             self._link_req = None
             if r.admit_time < 0:
                 # speculatively admitted requests (policy 'spec') already
                 # hold their decode slot; everyone else queues for admission
                 heapq.heappush(self.admit_queue, (t, r.rid, r))
+        elif kind == "refetch":
+            # failover backoff elapsed: the compressed cache re-enters the
+            # transfer queue and competes under the normal link policy
+            self.xfer_queue.append(payload[1])
         elif kind == "decode_step":
             self._finish_step(t, payload[1])
+        # 'wake': no state change — the event exists to force a scheduler
+        # pass (heartbeat sweep + death detection) at a fault-plan instant
 
     def _next_for_link(self) -> Request:
         """The link policy's pick: minimum ``link_key`` over the queued
@@ -326,27 +528,41 @@ class DisaggregatedScheduler:
                    * self.cfg.prefill_time_per_token)
             self._prefill_busy = True
             self._push(t + dur, _PRIO_PREFILL, ("prefill_done", batch))
+        if self.xfer_queue and self._shed_enabled():
+            self._shed_infeasible(t)
         if not self._link_busy and self.xfer_queue:
             r = self._next_for_link()
             r.link_start = t
             dur = self._transfer_duration(r.prompt_len)
-            self.link_busy_s += dur
+            end = t + dur
+            if self.faults is not None:
+                # link brownout: the same bytes at the degraded piecewise
+                # rate — the link is HELD for the full wall-clock interval,
+                # so occupancy stays conserved (link_busy_s == Σ intervals)
+                end = self.faults.link_wall_clock(t, dur)
+            self.link_busy_s += end - t
             self._link_busy = True
             self._link_req = r
-            self._push(t + dur, _PRIO_TRANSFER, ("transfer_done", r))
-        while self.admit_queue and len(self.decoding) < self.cfg.max_decode_slots:
+            self._push(end, _PRIO_TRANSFER, ("transfer_done", r))
+        while self.admit_queue:
+            w = self._pick_worker()
+            if w is None:
+                break
             r = heapq.heappop(self.admit_queue)[2]
             r.admit_time = t
+            r.worker = w
             self.decoding.append(r)
         if (self.policy.speculative and self._link_req is not None
-                and self._link_req.admit_time < 0
-                and len(self.decoding) < self.cfg.max_decode_slots):
+                and self._link_req.admit_time < 0):
             # speculative admission: the transferring request pre-claims a
             # LEFTOVER slot (never outranks a completed transfer above), so
             # its decode-slot wait overlaps its transfer
-            r = self._link_req
-            r.admit_time = t
-            self.decoding.append(r)
+            w = self._pick_worker()
+            if w is not None:
+                r = self._link_req
+                r.admit_time = t
+                r.worker = w
+                self.decoding.append(r)
         # the decode worker only ticks when some slot can actually produce a
         # token: a population of purely speculative slot-holders (transfers
         # still in flight) must not start the lockstep clock early, or a
@@ -376,24 +592,41 @@ class DisaggregatedScheduler:
                 r.first_token_time = t
             if r.tokens_out >= r.max_new_tokens:
                 r.finish_time = t
+                r.state = "failed-over" if r.failovers else "completed"
                 self.decoding.remove(r)
                 self.done.append(r)
 
 
 def summarize(done: List[Request]) -> Dict[str, float]:
+    """Aggregate a drained run.  Latency/throughput statistics cover SERVED
+    requests only (``completed`` + ``failed-over``) — a shed request has no
+    TTFT and averaging it in would reward shedding; the failure-plane
+    outcome counts sit alongside so nothing disappears from the report."""
     if not done:
         return {}
-    ttfts = sorted(r.first_token_time - r.arrival for r in done)
+    served = [r for r in done if r.state != "shed"]
+    counts = {
+        "n_shed": float(len(done) - len(served)),
+        "n_failed_over": float(sum(1 for r in served
+                                   if r.state == "failed-over")),
+        "n_failovers": float(sum(r.failovers for r in done)),
+        "n_retries": float(sum(r.retries for r in done)),
+    }
+    if not served:
+        return {"n": 0, **counts}
+    ttfts = sorted(r.first_token_time - r.arrival for r in served)
     n = len(ttfts)
     # nearest-rank (ceil) quantile: 1-based rank ceil(q*n); the old floor
     # index int(q*(n-1)) underestimated the tail for small n
     p99 = ttfts[min(n - 1, max(0, math.ceil(0.99 * n) - 1))]
-    total_tokens = sum(r.tokens_out for r in done)
-    makespan = max(r.finish_time for r in done) - min(r.arrival for r in done)
+    total_tokens = sum(r.tokens_out for r in served)
+    makespan = (max(r.finish_time for r in served)
+                - min(r.arrival for r in served))
     return {
-        "n": len(done),
+        "n": len(served),
         "mean_ttft_s": sum(ttfts) / n,
         "p99_ttft_s": p99,
         "throughput_tok_s": total_tokens / makespan if makespan > 0 else 0.0,
-        "throughput_req_s": len(done) / makespan if makespan > 0 else 0.0,
+        "throughput_req_s": len(served) / makespan if makespan > 0 else 0.0,
+        **counts,
     }

@@ -31,13 +31,27 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.compat import shard_map
 from repro.core.backend import CodecBackend, get_backend
 from repro.core.pipeline import ChunkSchedule
+from repro.serving.faults import FaultChannel, resolve_faults
 from repro.serving.plan import TransferPlan, TransferStats, leaf_key
 
 _WIRE_INT = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+# hard ceiling on wire attempts per unit (initial ship + re-fetches).  The
+# default FaultPlan stops randomized faults at max_attempt=8, so only an
+# explicitly-persistent adversarial plan can reach this — and then the
+# session fails LOUDLY instead of decoding garbage or spinning forever.
+_MAX_WIRE_ATTEMPTS = 32
+
+
+class TransferIntegrityError(RuntimeError):
+    """A wire unit could not be delivered intact within the attempt budget —
+    every capacity-schedule re-fetch and the terminal raw re-fetches all
+    failed verification.  Raised instead of ever decoding corrupt bytes."""
 
 
 def _backend_for(comp_obj, be: CodecBackend) -> CodecBackend:
@@ -210,15 +224,46 @@ class TransferSession:
     """Run a :class:`TransferPlan` repeatedly: ``send``/``recv`` or the fused
     ``transfer``.  Accumulates ``calls``/``total_wire_bytes``; per-call
     accounting is in ``last_stats`` (None on the mesh path, whose wire bytes
-    are read from the lowered HLO — see analysis/roofline.py)."""
+    are read from the lowered HLO — see analysis/roofline.py).
 
-    def __init__(self, plan: TransferPlan):
+    **Wire integrity** (``verify=True`` and/or ``faults=``): every wire
+    object — pipeline chunks, tensor-path leaves, sidecars — ships inside a
+    Fletcher-32 checksum frame over a :class:`~repro.serving.faults.
+    FaultChannel`.  With ``verify`` on, a mismatched or dropped frame is
+    re-fetched through the plan's capacity-retry machinery (re-encode at the
+    next schedule step, re-ship with the fault coordinate re-keyed), with
+    the unit's RAW bits as the terminal re-fetch; corrupt bytes are never
+    decoded, and exhaustion raises :class:`TransferIntegrityError` instead
+    of degrading silently.  ``faults=`` injects a seeded
+    :class:`~repro.serving.faults.FaultPlan` into the channel so all of this
+    is testable on CPU.  Local paths only — the mesh path's wire is a traced
+    collective with no host frame to checksum."""
+
+    def __init__(self, plan: TransferPlan, *, faults=None,
+                 verify: bool = False):
         self.plan = plan
+        self.verify = verify
+        self.faults = resolve_faults(faults)
+        if plan.mesh is not None and (verify or self.faults is not None):
+            raise ValueError(
+                "verify/faults run on the host wire hop; the mesh path's "
+                "collective permute has no host-side frame to checksum")
+        # the checksum-framed wire: active whenever faults are injected or
+        # verification is on, so the happy path pays nothing
+        self._channel = (FaultChannel(self._object_checksum, self.faults)
+                         if (verify or self.faults is not None) else None)
         self.last_stats: Optional[TransferStats] = None
         self.calls = 0
         self.total_wire_bytes = 0.0
+        self._uid = 0         # per-send transfer id (fault-plan keying)
+        self._injected_seen = 0
         self._staged = None   # in-flight payload between send() and recv()
         self._mesh_fn = self._build_mesh_fn() if plan.mesh is not None else None
+
+    def _object_checksum(self, obj) -> int:
+        """Fletcher-32 over any wire object — compressed (backend leaves or
+        host payload bytes) or a raw array."""
+        return _backend_for(obj, self.plan.backend).checksum(obj)
 
     # -- public API ----------------------------------------------------------
     def send(self, cache, check: bool = True) -> None:
@@ -231,6 +276,7 @@ class TransferSession:
             raise RuntimeError("send() called twice without recv()")
         if check:
             self._check_structure(cache)
+        self._uid += 1
         if self.plan.mesh is not None:
             self._staged = ("mesh", cache)
         elif self.plan.granularity == "chunked":
@@ -238,10 +284,24 @@ class TransferSession:
         else:
             self._staged = ("tensor", self._send_tensor(cache))
 
-    def recv(self, select_dst: bool = True):
-        """Decode-side half: returns the reassembled cache pytree."""
+    def _set_verify(self, verify: Optional[bool]) -> None:
+        """Per-call ``verify=`` knob: None keeps the session default."""
+        if verify is None:
+            return
+        if verify and self._channel is None:
+            raise ValueError(
+                "this session shipped unframed payloads (no checksums on the "
+                "wire); build it with plan.session(verify=True) or faults=")
+        self.verify = bool(verify)
+
+    def recv(self, select_dst: bool = True, verify: Optional[bool] = None):
+        """Decode-side half: returns the reassembled cache pytree.
+        ``verify=True`` enforces the checksum frames shipped by ``send``
+        (re-fetch on mismatch; see class docs), ``verify=False`` delivers
+        without enforcement, None keeps the session default."""
         if self._staged is None:
             raise RuntimeError("recv() called before send()")
+        self._set_verify(verify)
         kind, payload = self._staged
         self._staged = None
         if kind == "mesh":
@@ -253,16 +313,19 @@ class TransferSession:
         self._account()
         return out
 
-    def transfer(self, cache, select_dst: bool = True, check: bool = True):
+    def transfer(self, cache, select_dst: bool = True, check: bool = True,
+                 verify: Optional[bool] = None):
         """Fused send + recv.  The local chunked path interleaves the stages
         on the explicit ``ChunkSchedule`` (encode t / ship t-1 / decode t-2),
         exactly the ordering deployment wall-clock overlaps; the result is
-        bit-identical to split send()+recv()."""
+        bit-identical to split send()+recv().  ``verify=`` as on ``recv``."""
+        self._set_verify(verify)
         if self.plan.mesh is None and self.plan.granularity == "chunked":
             if self._staged is not None:
                 raise RuntimeError("transfer() called with a send() pending")
             if check:
                 self._check_structure(cache)
+            self._uid += 1
             out = self._transfer_chunked_interleaved(cache)
             self._account()
             return out
@@ -287,6 +350,11 @@ class TransferSession:
     def _account(self) -> None:
         self.calls += 1
         if self.last_stats is not None:
+            if self._channel is not None:
+                # per-call slice of the channel's running fault counter
+                self.last_stats.faults_injected = (self._channel.injected
+                                                   - self._injected_seen)
+                self._injected_seen = self._channel.injected
             self.total_wire_bytes += self.last_stats.wire_bytes
 
     # -- local / tensor ------------------------------------------------------
@@ -296,12 +364,97 @@ class TransferSession:
         comp, raw = encode_leaves(self.plan, cache, scheduled=True,
                                   stats=stats)
         self.last_stats = stats
-        return comp, raw, cache
+        if self._channel is None:
+            return comp, raw, cache, None, None
+        # frame every wire object; keep the pristine dicts sender-side so a
+        # verified re-fetch can re-ship the exact same object
+        comp_f = {k: self._channel.ship(v, self._uid, ci, 0)
+                  for ci, (k, v) in enumerate(comp.items())}
+        raw_f = {k: self._channel.ship(v, self._uid, len(comp) + ci, 0)
+                 for ci, (k, v) in enumerate(raw.items())}
+        return comp_f, raw_f, cache, comp, raw
 
     def _recv_tensor(self, payload):
-        comp, raw, structure = payload
+        comp, raw, structure, pristine_comp, pristine_raw = payload
+        if self._channel is not None:
+            comp, raw = self._deliver_tensor(comp, raw, structure,
+                                             pristine_comp, pristine_raw)
         return decode_leaves(comp, raw, structure,
                              backend=self.plan.tc.backend)
+
+    def _deliver_tensor(self, comp_f, raw_f, structure, pristine_comp,
+                        pristine_raw):
+        """Unframe + verify every tensor-path entry.  A compressed entry
+        whose re-ships exhaust the retry budget falls back to the whole
+        ORIGINAL leaf shipped raw (mirroring the encode-overflow fallback);
+        raw entries re-ship themselves until intact."""
+        stats = self.last_stats
+        leaves = {leaf_key(p): leaf for p, leaf in
+                  jax.tree_util.tree_flatten_with_path(structure)[0]}
+        comp: Dict[str, object] = {}
+        raw: Dict[str, object] = {}
+        ci = 0
+        for key, frame in comp_f.items():
+            base = key[:-3] if key.endswith("#hi") else key
+            obj, fell_raw = self._deliver_entry(
+                frame, ci, stats, resend=pristine_comp[key],
+                raw_payload=leaves[base])
+            if fell_raw:
+                raw[base] = obj      # whole leaf ships raw; lo sidecar unused
+            else:
+                comp[key] = obj
+            ci += 1
+        for key, frame in raw_f.items():
+            obj, _ = self._deliver_entry(frame, ci, stats,
+                                         resend=pristine_raw[key],
+                                         raw_payload=pristine_raw[key])
+            raw.setdefault(key, obj)
+            ci += 1
+        return comp, raw
+
+    def _deliver_entry(self, frame, ci: int, stats: TransferStats, *,
+                       resend, raw_payload):
+        """``(payload, used_raw_fallback)`` for one framed wire entry.
+
+        Verified mode re-fetches on mismatch/drop: ``retry_doublings + 1``
+        re-ships of the staged compressed object (each attempt re-keys the
+        fault plan, so injected faults re-roll), then the raw payload as the
+        terminal re-fetch — itself verified and retried, failing loud past
+        ``_MAX_WIRE_ATTEMPTS``.  Unverified mode delivers whatever arrived
+        (corruption flows through undetected — the hazard ``verify=``
+        closes); only a full drop heals from the staged raw payload."""
+        payload, intact = self._channel.deliver(frame)
+        stats.fault_delay_s += frame.delay_s
+        if not self.verify:
+            if payload is None:      # dropped in flight: heal from the
+                return raw_payload, True  # staged raw payload, raw-routed
+            return payload, False
+        is_raw = resend is raw_payload
+        attempt = 1
+        while not intact:
+            stats.verify_failures += 1
+            if attempt >= _MAX_WIRE_ATTEMPTS:
+                raise TransferIntegrityError(
+                    f"wire entry {ci}: integrity not established after "
+                    f"{attempt} attempts (raw re-fetches included)")
+            if attempt <= self.plan.tc.retry_doublings + 1:
+                obj, is_raw = resend, resend is raw_payload
+            else:
+                obj, is_raw = raw_payload, True
+            stats.refetches += 1
+            stats.raw_refetches += int(is_raw)
+            stats.refetch_wire_bytes += self._object_wire_bytes(obj, is_raw)
+            frame = self._channel.ship(obj, self._uid, ci, attempt)
+            payload, intact = self._channel.deliver(frame)
+            stats.fault_delay_s += frame.delay_s
+            attempt += 1
+        return payload, is_raw
+
+    def _object_wire_bytes(self, obj, is_raw: bool) -> float:
+        if is_raw or isinstance(obj, (jax.Array, np.ndarray)):
+            a = np.asarray(obj)
+            return float(a.size * a.dtype.itemsize)
+        return float(_backend_for(obj, self.plan.backend).wire_bytes(obj))
 
     # -- local / chunked -----------------------------------------------------
     def _encode_chunk(self, stream, i: int):
@@ -343,8 +496,72 @@ class TransferSession:
         seg = self.plan.segments[i]
         if payload is None:      # raw fallback: the original bits shipped
             return stream[seg.start:seg.stop]
+        if isinstance(payload, (jax.Array, np.ndarray)):
+            # explicit raw bits (fault-channel mode ships them for real)
+            return jnp.asarray(payload).reshape(-1)
         be = _backend_for(payload, self.plan.backend)
         return jnp.asarray(be.decode_bits(payload)).reshape(-1)
+
+    def _wire_hop(self, stream, i: int, ct, stats: TransferStats):
+        """Chunk ``i``'s full send side: the capacity-schedule walk, then the
+        checksum-framed channel when active.  Under a channel the raw
+        fallback ships its EXPLICIT bits — the local-slice shortcut would
+        make the wire hop unfalsifiable under fault injection."""
+        p = self._ship_chunk(stream, i, ct, stats)
+        if self._channel is None:
+            return p
+        seg = self.plan.segments[i]
+        payload = p if p is not None else stream[seg.start:seg.stop]
+        return self._channel.ship(payload, self._uid, i, 0)
+
+    def _chunk_out(self, stream, i: int, p, stats: TransferStats):
+        if self._channel is None:
+            return self._decode_chunk(stream, i, p)
+        return self._deliver_chunk(stream, i, p, stats)
+
+    def _deliver_chunk(self, stream, i: int, frame, stats: TransferStats):
+        """Receiver side of chunk ``i`` under an active channel.  Verified
+        mode routes a mismatched/dropped frame through the REMAINING capacity
+        schedule — re-encode at the next step, re-ship with the attempt
+        re-keyed so injected faults re-roll — and past the schedule's end
+        re-fetches the chunk's raw bits (also verified).  Never hands corrupt
+        bytes to the decoder; fails loud past ``_MAX_WIRE_ATTEMPTS``."""
+        seg = self.plan.segments[i]
+        tc = self.plan.tc
+        payload, intact = self._channel.deliver(frame)
+        stats.fault_delay_s += frame.delay_s
+        if not self.verify:
+            # unverified: corruption flows through; a drop falls back to the
+            # local-slice shortcut (visible only in channel.injected)
+            return self._decode_chunk(stream, i, payload)
+        sched = self.plan.schedule_for(seg.n_elements, seg.cap)
+        attempt = 1
+        while not intact:
+            stats.verify_failures += 1
+            if attempt >= _MAX_WIRE_ATTEMPTS:
+                raise TransferIntegrityError(
+                    f"chunk {i}: integrity not established after "
+                    f"{attempt} attempts (raw re-fetches included)")
+            if attempt < len(sched):
+                be, layout, cap = sched[attempt]
+                ct = be.encode(stream[seg.start:seg.stop], tc.codebook,
+                               chunk=tc.chunk, cap=cap, layout=layout)
+                if bool(be.ok(ct)):
+                    obj, nbytes, is_raw = ct, float(be.wire_bytes(ct)), False
+                else:
+                    obj, nbytes, is_raw = (stream[seg.start:seg.stop],
+                                           seg.raw_bytes, True)
+            else:
+                obj, nbytes, is_raw = (stream[seg.start:seg.stop],
+                                       seg.raw_bytes, True)
+            stats.refetches += 1
+            stats.raw_refetches += int(is_raw)
+            stats.refetch_wire_bytes += nbytes
+            frame = self._channel.ship(obj, self._uid, i, attempt)
+            payload, intact = self._channel.deliver(frame)
+            stats.fault_delay_s += frame.delay_s
+            attempt += 1
+        return self._decode_chunk(stream, i, payload)
 
     def _chunked_sidecars(self, cache, stats: TransferStats):
         """Everything outside the pipelined stream: fold the stream, encode
@@ -374,19 +591,55 @@ class TransferSession:
             raw_passthrough_bytes=0.0, n_elements=self.plan.stream_len,
             chunk_retried=[False] * n, chunk_retry_steps=[0] * n)
 
+    def _ship_sidecars(self, lo, fp8_payload, raw):
+        """Frame the non-pipelined wire objects (lo halves, fp8 sidecars,
+        raw passthrough).  Chunk-index keying continues past the pipeline
+        chunks so every fault coordinate stays unique within the transfer."""
+        framed = {}
+        ci = self.plan.n_chunks
+        for name, d in (("lo", lo), ("fp8", fp8_payload), ("raw", raw)):
+            framed[name] = {k: self._channel.ship(v, self._uid, ci + j, 0)
+                            for j, (k, v) in enumerate(d.items())}
+            ci += len(d)
+        return framed["lo"], framed["fp8"], framed["raw"]
+
+    def _deliver_sidecars(self, lo_f, fp8_f, raw_f, pristine, stats):
+        """Unframe + verify the sidecars; a faulted sidecar re-ships its
+        pristine object (it IS the terminal payload — no cheaper encoding
+        below it) until intact."""
+        out = []
+        ci = self.plan.n_chunks
+        for frames, orig in zip((lo_f, fp8_f, raw_f), pristine):
+            d = {}
+            for j, (k, frame) in enumerate(frames.items()):
+                d[k], _ = self._deliver_entry(frame, ci + j, stats,
+                                              resend=orig[k],
+                                              raw_payload=orig[k])
+            out.append(d)
+            ci += len(frames)
+        return out
+
     def _send_chunked(self, cache):
         stats = self._new_chunked_stats()
         stream, lo, fp8_payload, raw = self._chunked_sidecars(cache, stats)
-        in_flight = [self._ship_chunk(stream, i, self._encode_chunk(stream, i),
-                                      stats)
+        in_flight = [self._wire_hop(stream, i, self._encode_chunk(stream, i),
+                                    stats)
                      for i in range(self.plan.n_chunks)]
         self.last_stats = stats
-        return stream, in_flight, lo, fp8_payload, raw
+        if self._channel is None:
+            return stream, in_flight, lo, fp8_payload, raw, None
+        pristine = (lo, fp8_payload, raw)
+        lo_f, fp8_f, raw_f = self._ship_sidecars(lo, fp8_payload, raw)
+        return stream, in_flight, lo_f, fp8_f, raw_f, pristine
 
     def _recv_chunked(self, payload):
-        stream, in_flight, lo, fp8_payload, raw = payload
-        decoded = [self._decode_chunk(stream, i, p)
+        stream, in_flight, lo, fp8_payload, raw, pristine = payload
+        stats = self.last_stats
+        decoded = [self._chunk_out(stream, i, p, stats)
                    for i, p in enumerate(in_flight)]
+        if self._channel is not None:
+            lo, fp8_payload, raw = self._deliver_sidecars(
+                lo, fp8_payload, raw, pristine, stats)
         return self._reassemble(decoded, lo, fp8_payload, raw)
 
     def _reassemble(self, decoded_bits: List[jax.Array], lo, fp8_payload, raw):
@@ -416,11 +669,15 @@ class TransferSession:
             if 0 <= enc_i < n:
                 encoded[enc_i] = self._encode_chunk(stream, enc_i)
             if 0 <= xfer_i < n:
-                in_flight[xfer_i] = self._ship_chunk(
+                in_flight[xfer_i] = self._wire_hop(
                     stream, xfer_i, encoded.pop(xfer_i), stats)
             if 0 <= dec_i < n:
-                decoded[dec_i] = self._decode_chunk(
-                    stream, dec_i, in_flight.pop(dec_i))
+                decoded[dec_i] = self._chunk_out(
+                    stream, dec_i, in_flight.pop(dec_i), stats)
+        if self._channel is not None:
+            lo_f, fp8_f, raw_f = self._ship_sidecars(lo, fp8_payload, raw)
+            lo, fp8_payload, raw = self._deliver_sidecars(
+                lo_f, fp8_f, raw_f, (lo, fp8_payload, raw), stats)
         self.last_stats = stats
         return self._reassemble([decoded[i] for i in range(n)], lo,
                                 fp8_payload, raw)

@@ -1,0 +1,566 @@
+"""Fault-tolerant transfer plane: detector semantics, trainer restart
+budget, wire-integrity recovery, failover accounting, and overload shedding
+(ISSUE 7).  Everything runs on CPU from seeded fault plans."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codebook as cbm
+from repro.core import wire
+from repro.core.pipeline import CodecProfile
+from repro.distributed.fault_tolerance import (FailureDetector, FaultConfig,
+                                               ResilientTrainer)
+from repro.serving.faults import (FaultChannel, FaultPlan, LinkBrownout,
+                                  WorkerKill, available_fault_plans,
+                                  get_fault_plan, resolve_faults)
+from repro.serving.plan import TransferConfig, TransferPlan
+from repro.serving.scheduler import (DisaggregatedScheduler, Request,
+                                     SchedulerConfig, summarize)
+from repro.serving.session import TransferIntegrityError
+
+
+# ---------------------------------------------------------------------------
+# FailureDetector: pure detection vs transition, revival
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _detector(n=3, timeout=1.0):
+    clk = _Clock()
+    det = FailureDetector(n, FaultConfig(heartbeat_timeout_s=timeout),
+                          clock=clk)
+    return det, clk
+
+
+def test_timed_out_is_pure():
+    det, clk = _detector()
+    clk.t = 2.0
+    assert det.timed_out() == [0, 1, 2]
+    # repeated PURE detection agrees — no state was mutated
+    assert det.timed_out() == [0, 1, 2]
+    assert det.alive_count() == 3
+
+
+def test_newly_dead_reports_each_death_once():
+    det, clk = _detector()
+    clk.t = 2.0
+    assert det.newly_dead() == [0, 1, 2]
+    assert det.newly_dead() == []          # transition happened exactly once
+    assert det.alive_count() == 0
+
+
+def test_dead_workers_is_idempotent():
+    """The historical bug: dead_workers() mutated ``alive`` during detection,
+    so a second poll within one timeout window returned [] and callers
+    believed the fleet had healed."""
+    det, clk = _detector()
+    clk.t = 2.0
+    assert det.dead_workers() == [0, 1, 2]
+    assert det.dead_workers() == [0, 1, 2]   # still dead on the second poll
+
+
+def test_revival_on_renewed_heartbeat():
+    det, clk = _detector()
+    clk.t = 2.0
+    assert det.newly_dead() == [0, 1, 2]
+    clk.t = 2.5
+    det.heartbeat(1)
+    assert det.alive_count() == 1
+    assert det.dead_workers() == [0, 2]
+    # the revived worker can die AGAIN and is reported again
+    clk.t = 5.0
+    assert det.newly_dead() == [1]
+
+
+def test_partial_timeouts():
+    det, clk = _detector()
+    clk.t = 0.9
+    det.heartbeat(2)
+    clk.t = 1.5
+    assert det.timed_out() == [0, 1]
+    assert det.dead_workers() == [0, 1]
+
+
+def test_straggler_detection():
+    det, clk = _detector()
+    for _ in range(6):
+        det.heartbeat(0, step_time=1.0)
+        det.heartbeat(1, step_time=1.0)
+        det.heartbeat(2, step_time=5.0)      # 5x the median -> straggler
+    assert det.stragglers() == [2]
+
+
+# ---------------------------------------------------------------------------
+# ResilientTrainer: crash-restart budget, checkpoint cadence
+# ---------------------------------------------------------------------------
+
+def _trainer(fault_source, cfg=None, saves=None):
+    saves = saves if saves is not None else []
+    ckpt = {"state": 0, "step": 0}
+
+    def step_fn(state, step):
+        return state + 1, {"loss": float(step)}
+
+    def save_fn(step, state):
+        saves.append(step)
+        ckpt["state"], ckpt["step"] = state, step
+
+    def restore_fn():
+        return ckpt["state"], ckpt["step"]
+
+    cfg = cfg or FaultConfig(max_restarts=4, checkpoint_every=5)
+    return ResilientTrainer(step_fn, save_fn, restore_fn, cfg,
+                            fault_source=fault_source), saves
+
+
+def test_trainer_recovers_from_crashes():
+    crash_at = {7, 12}
+    fired = set()
+
+    def faults(step):
+        if step in crash_at and step not in fired:
+            fired.add(step)
+            return "crash"
+        return None
+
+    trainer, saves = _trainer(faults)
+    report = trainer.run(0, 20)
+    assert report.steps_completed == 20
+    assert report.restarts == 2
+    assert report.failures_seen == 2
+
+
+def test_trainer_restart_budget_exhausts_loudly():
+    trainer, _ = _trainer(lambda s: "crash" if s == 3 else None,
+                          cfg=FaultConfig(max_restarts=2, checkpoint_every=5))
+    # the crash repeats forever (restore lands before step 3 every time):
+    # the budget must trip instead of looping silently
+    with pytest.raises(RuntimeError, match="restart budget"):
+        trainer.run(0, 10)
+
+
+def test_trainer_checkpoint_cadence():
+    trainer, saves = _trainer(lambda s: None,
+                              cfg=FaultConfig(checkpoint_every=4))
+    trainer.run(0, 10)
+    assert saves == [4, 8, 10]     # every 4 steps plus the final step
+
+
+def test_trainer_straggler_mitigation_counts():
+    trainer, _ = _trainer(lambda s: "straggler:2" if s in (1, 5) else None)
+    report = trainer.run(0, 8)
+    assert report.stragglers_mitigated == 2
+    assert report.steps_completed == 8
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: determinism, channel framing
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_is_deterministic_and_order_independent():
+    plan = FaultPlan(seed=42, corrupt_p=0.3, drop_p=0.2)
+    coords = [(u, c, a) for u in range(3) for c in range(8) for a in range(3)]
+    ref = {x: plan.chunk_fault(*x) for x in coords}
+    # same draws in any evaluation order, and from a fresh equal-seed plan
+    for x in reversed(coords):
+        assert plan.chunk_fault(*x) == ref[x]
+        assert FaultPlan(seed=42, corrupt_p=0.3, drop_p=0.2).chunk_fault(*x) \
+            == ref[x]
+    # a different seed gives a different fault pattern
+    other = {x: FaultPlan(seed=43, corrupt_p=0.3, drop_p=0.2).chunk_fault(*x)
+             for x in coords}
+    assert other != ref
+
+
+def test_fault_plan_attempt_rerolls_and_caps():
+    plan = FaultPlan(seed=1, corrupt_p=0.5)
+    faults = [plan.chunk_fault(0, 0, a) for a in range(plan.max_attempt)]
+    assert any(f is None for f in faults)        # re-rolls eventually clear
+    # randomized faults stop at max_attempt: the terminal raw re-fetch of an
+    # adversarial-rate plan can always land
+    assert plan.chunk_fault(0, 0, plan.max_attempt) is None
+
+
+def test_explicit_chunk_faults_clear_after_persistent_attempts():
+    plan = FaultPlan(seed=0, corrupt_chunks=(2,), persistent_attempts=2)
+    assert plan.chunk_fault(0, 2, 0) == "corrupt"
+    assert plan.chunk_fault(0, 2, 1) == "corrupt"
+    assert plan.chunk_fault(0, 2, 2) is None
+
+
+def test_brownout_wall_clock_integration():
+    plan = FaultPlan(brownouts=(LinkBrownout(start=1.0, stop=2.0, factor=0.5),))
+    # 1s of nominal link time dispatched at t=0.5: 0.5s at full rate, the
+    # remaining 0.5s of work at half rate -> done at 0.5 + 0.5 + 1.0
+    assert plan.link_wall_clock(0.5, 1.0) == pytest.approx(2.0)
+    # entirely outside the brownout: unchanged
+    assert plan.link_wall_clock(3.0, 1.0) == pytest.approx(4.0)
+    # rate at a point in/out of the interval
+    assert plan.link_rate(1.5) == 0.5 and plan.link_rate(2.5) == 1.0
+
+
+def test_fault_registry_mirrors_backend_registry():
+    assert "chaos" in available_fault_plans()
+    assert isinstance(get_fault_plan("chaos"), FaultPlan)
+    assert resolve_faults(None) is None
+    assert resolve_faults("chaos").worker_kills
+    p = FaultPlan(seed=5)
+    assert resolve_faults(p) is p
+    with pytest.raises(KeyError):
+        get_fault_plan("nope")
+
+
+def test_channel_checksum_catches_injected_corruption():
+    from repro.core.backend import get_backend
+    be = get_backend("wire")
+    bits = np.random.default_rng(0).integers(0, 1 << 16, 4096).astype(np.uint16)
+    cb = cbm.calibrate([bits], k=16)
+    comp = be.encode(jax.lax.bitcast_convert_type(jnp.asarray(bits),
+                                                  jnp.bfloat16), cb)
+    ch = FaultChannel(be.checksum, FaultPlan(seed=3, corrupt_chunks=(0,)))
+    frame = ch.ship(comp, uid=0, chunk=0, attempt=0)
+    _, intact = ch.deliver(frame)
+    assert not intact and ch.injected == 1
+    # re-ship past the persistent window: intact, and the payload survives
+    frame2 = ch.ship(comp, uid=0, chunk=0, attempt=1)
+    payload2, intact2 = ch.deliver(frame2)
+    assert intact2
+    assert np.array_equal(wire.decode(payload2.payload), bits)
+
+
+# ---------------------------------------------------------------------------
+# session-level wire integrity (the tentpole's recovery guarantee)
+# ---------------------------------------------------------------------------
+
+def _bf16(shape, seed):
+    r = np.random.default_rng(seed)
+    x = (r.standard_normal(shape) * np.exp(r.standard_normal(shape)))
+    return jnp.asarray(x.astype(np.float32)).astype(jnp.bfloat16)
+
+
+@pytest.fixture(scope="module")
+def small_cache():
+    cache = {"k": _bf16((2, 32, 64), 1), "v": _bf16((2, 32, 64), 2),
+             "scale": jnp.ones((2,), jnp.float32)}
+    bits = np.asarray(jax.lax.bitcast_convert_type(cache["k"],
+                                                   jnp.uint16)).ravel()
+    return cache, cbm.calibrate([bits], k=16)
+
+
+def _assert_cache_equal(out, cache):
+    for k in cache:
+        assert np.array_equal(np.asarray(out[k]), np.asarray(cache[k])), k
+
+
+@pytest.mark.parametrize("n_chunks", [1, 4])
+def test_corrupted_chunk_recovers_bit_identical(small_cache, n_chunks):
+    """The acceptance property: a corrupted chunk is detected, re-fetched,
+    and the decoded KV is bit-identical to the fault-free transfer."""
+    cache, cb = small_cache
+    plan = TransferPlan.build(cache, TransferConfig(codebook=cb,
+                                                    n_chunks=n_chunks))
+    sess = plan.session(verify=True,
+                        faults=FaultPlan(seed=3, corrupt_chunks=(0,)))
+    out = sess.transfer(cache)
+    _assert_cache_equal(out, cache)
+    st = sess.last_stats
+    assert st.verify_failures >= 1 and st.refetches >= 1
+    assert st.faults_injected >= 1
+    assert st.refetch_wire_bytes > 0
+
+
+def test_unverified_corruption_flows_through(small_cache):
+    """Without verify the corruption decodes to garbage — the exact hazard
+    the checksum frame exists to close."""
+    cache, cb = small_cache
+    plan = TransferPlan.build(cache, TransferConfig(codebook=cb, n_chunks=4))
+    sess = plan.session(faults=FaultPlan(seed=3, corrupt_chunks=(1,)))
+    out = sess.transfer(cache)
+    assert any(not np.array_equal(np.asarray(out[k]), np.asarray(cache[k]))
+               for k in cache)
+    assert sess._channel.injected >= 1
+
+
+def test_drop_and_corrupt_recover_under_random_faults(small_cache):
+    cache, cb = small_cache
+    plan = TransferPlan.build(cache, TransferConfig(codebook=cb, n_chunks=4))
+    sess = plan.session(verify=True,
+                        faults=FaultPlan(seed=9, corrupt_p=0.3, drop_p=0.1))
+    for _ in range(3):                      # several transfers, same session
+        _assert_cache_equal(sess.transfer(cache), cache)
+
+
+def test_seeded_session_faults_are_deterministic(small_cache):
+    cache, cb = small_cache
+    plan = TransferPlan.build(cache, TransferConfig(codebook=cb, n_chunks=4))
+    mk = lambda: plan.session(verify=True,
+                              faults=FaultPlan(seed=9, corrupt_p=0.3,
+                                               drop_p=0.1))
+    a, b = mk(), mk()
+    oa, ob = a.transfer(cache), b.transfer(cache)
+    _assert_cache_equal(oa, ob)
+    assert a.last_stats.verify_failures == b.last_stats.verify_failures
+    assert a.last_stats.refetches == b.last_stats.refetches
+    assert a.last_stats.faults_injected == b.last_stats.faults_injected
+
+
+def test_tensor_path_split_send_recv_verify_knob(small_cache):
+    cache, cb = small_cache
+    plan = TransferPlan.build(cache, TransferConfig(codebook=cb,
+                                                    compress_fp32=True))
+    sess = plan.session(faults=FaultPlan(seed=5, corrupt_chunks=(0,)))
+    sess.send(cache)
+    out = sess.recv(verify=True)            # per-call knob on recv
+    _assert_cache_equal(out, cache)
+    assert sess.last_stats.verify_failures >= 1
+
+
+def test_verify_knob_rejects_unframed_session(small_cache):
+    cache, cb = small_cache
+    plan = TransferPlan.build(cache, TransferConfig(codebook=cb))
+    sess = plan.session()                   # no channel: nothing was framed
+    with pytest.raises(ValueError, match="unframed"):
+        sess.transfer(cache, verify=True)
+
+
+def test_persistent_adversary_fails_loud(small_cache):
+    cache, cb = small_cache
+    plan = TransferPlan.build(cache, TransferConfig(codebook=cb, n_chunks=2))
+    sess = plan.session(verify=True,
+                        faults=FaultPlan(seed=1, corrupt_chunks=(0,),
+                                         persistent_attempts=64))
+    with pytest.raises(TransferIntegrityError):
+        sess.transfer(cache)
+
+
+# ---------------------------------------------------------------------------
+# scheduler failure semantics
+# ---------------------------------------------------------------------------
+
+_PROFILE = CodecProfile(g_enc=80e9, g_dec=120e9, link_bw=4e9, ratio=1.33,
+                        fixed_overhead_s=1e-4)
+
+
+def _requests(n=12, seed=0, budget=(8, 32)):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, arrival=float(rng.uniform(0, 0.05)),
+                    prompt_len=int(rng.integers(256, 4096)),
+                    max_new_tokens=int(rng.integers(*budget)))
+            for i in range(n)]
+
+
+def _cfg(**kw):
+    base = dict(max_prefill_batch=4, max_decode_slots=8,
+                kv_bytes_per_token=80_000, profile=_PROFILE, n_chunks=4)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def _check_conservation(sched, done):
+    """Link accounting invariants across any fault pattern: total charged
+    busy time equals the sum over EVERY occupancy interval (failover
+    re-fetches included), and the intervals are pairwise disjoint."""
+    ivals = sorted(i for r in done for i in r.link_history)
+    assert abs(sched.link_busy_s
+               - sum(b - a for a, b in ivals)) < 1e-9
+    for (_, stop), (start, _) in zip(ivals, ivals[1:]):
+        assert stop <= start + 1e-12
+
+
+def test_worker_death_failover_conserves_accounting():
+    fp = FaultPlan(seed=7, worker_kills=(WorkerKill(worker=0, at=0.1),))
+    sched = DisaggregatedScheduler(_cfg(n_decode_workers=2, faults=fp,
+                                        heartbeat_timeout_s=0.01))
+    for r in _requests():
+        sched.submit(r)
+    done = sched.run()
+    assert sched.failovers > 0
+    assert all(r.state in ("completed", "failed-over") for r in done)
+    assert all(r.tokens_out >= r.max_new_tokens for r in done)
+    # each failover is exactly one extra link occupancy
+    assert all(len(r.link_history) == 1 + r.retries for r in done)
+    _check_conservation(sched, done)
+    out = summarize(done)
+    assert out["n_failed_over"] >= 1 and out["n"] == 12
+
+
+def test_failed_over_requests_keep_emitted_tokens():
+    fp = FaultPlan(seed=7, worker_kills=(WorkerKill(worker=0, at=0.1),))
+    sched = DisaggregatedScheduler(_cfg(n_decode_workers=2, faults=fp,
+                                        heartbeat_timeout_s=0.01))
+    for r in _requests():
+        sched.submit(r)
+    done = sched.run()
+    for r in done:
+        if r.state == "failed-over":
+            # TTFT was set by the FIRST admission, before the failover
+            assert r.first_token_time < r.link_history[-1][0]
+
+
+def test_worker_revival_restores_capacity():
+    fp = FaultPlan(seed=2, worker_kills=(
+        WorkerKill(worker=0, at=0.1, revive_at=0.2),))
+    sched = DisaggregatedScheduler(_cfg(n_decode_workers=1, faults=fp,
+                                        heartbeat_timeout_s=0.01))
+    for r in _requests():
+        sched.submit(r)
+    done = sched.run()                      # completes despite 1-worker kill
+    assert len(done) == 12
+    _check_conservation(sched, done)
+
+
+def test_permanent_total_death_fails_loud():
+    fp = FaultPlan(seed=2, worker_kills=(WorkerKill(worker=0, at=0.1),))
+    sched = DisaggregatedScheduler(_cfg(n_decode_workers=1, faults=fp,
+                                        heartbeat_timeout_s=0.01))
+    for r in _requests():
+        sched.submit(r)
+    with pytest.raises(RuntimeError, match="never completed"):
+        sched.run()
+
+
+def test_brownout_stretches_held_link_time():
+    fp = FaultPlan(brownouts=(LinkBrownout(start=0.0, stop=10.0, factor=0.25),))
+    slow = DisaggregatedScheduler(_cfg(faults=fp))
+    fast = DisaggregatedScheduler(_cfg())
+    for r in _requests():
+        slow.submit(r)
+    for r in _requests():
+        fast.submit(r)
+    done_slow, done_fast = slow.run(), fast.run()
+    _check_conservation(slow, done_slow)
+    _check_conservation(fast, done_fast)
+    # the same bytes at 1/4 rate hold the link measurably longer
+    assert slow.link_busy_s > 2 * fast.link_busy_s
+
+
+def test_edf_sheds_minimal_infeasible_set():
+    """Only provably-lost requests are shed: exactly the ones whose deadline
+    cannot be met even by immediate dispatch.  FIFO serves everyone but
+    (necessarily) misses those same deadlines."""
+    def mk(n=16):
+        rs = _requests(n, seed=3)
+        for i, r in enumerate(rs):
+            # every 4th deadline is infeasible by construction (far below
+            # any possible transfer + decode-step time); the rest are lax
+            r.deadline = r.arrival + (1e-4 if i % 4 == 0 else 10.0)
+        return rs
+
+    shed_sched = DisaggregatedScheduler(_cfg(policy="edf-shed"))
+    for r in mk():
+        shed_sched.submit(r)
+    done = shed_sched.run()
+    shed_rids = {r.rid for r in done if r.state == "shed"}
+    assert shed_rids == {r.rid for r in mk() if r.deadline - r.arrival < 1.0}
+    assert all(r.state in ("completed", "shed") for r in done)
+    _check_conservation(shed_sched, done)
+
+    fifo_sched = DisaggregatedScheduler(_cfg(policy="fifo"))
+    for r in mk():
+        fifo_sched.submit(r)
+    fifo_done = fifo_sched.run()
+    assert all(r.state == "completed" for r in fifo_done)   # FIFO never sheds
+    # FIFO burned link time on those requests anyway and still missed them
+    for r in fifo_done:
+        if r.rid in shed_rids:
+            assert r.first_token_time > r.deadline
+    # shedding freed the link: survivors' TTFT is no worse in aggregate
+    shed_served = {r.rid: r for r in done if r.state != "shed"}
+    fifo_ttft = sum(r.first_token_time - r.arrival for r in fifo_done
+                    if r.rid in shed_served)
+    edf_ttft = sum(r.first_token_time - r.arrival
+                   for r in shed_served.values())
+    assert edf_ttft <= fifo_ttft + 1e-9
+
+
+def test_shed_infeasible_override_flag():
+    rs = _requests(8, seed=4)
+    for r in rs:
+        r.deadline = r.arrival + 1e-4       # all infeasible
+    sched = DisaggregatedScheduler(_cfg(policy="fifo", shed_infeasible=True))
+    for r in rs:
+        sched.submit(r)
+    done = sched.run()
+    assert summarize(done) == {"n": 0, "n_shed": 8.0, "n_failed_over": 0.0,
+                               "n_failovers": 0.0, "n_retries": 0.0}
+
+
+def test_failover_budget_exhaustion_sheds():
+    # kill/revive the only worker in a tight loop so residents fail over
+    # repeatedly; max_refetches=0 sheds on the FIRST failover
+    fp = FaultPlan(seed=1, worker_kills=(
+        WorkerKill(worker=0, at=0.1, revive_at=0.15),))
+    sched = DisaggregatedScheduler(_cfg(n_decode_workers=1, faults=fp,
+                                        heartbeat_timeout_s=0.01,
+                                        max_refetches=0))
+    for r in _requests():
+        sched.submit(r)
+    done = sched.run()
+    assert sched.sheds > 0
+    assert all(r.state in ("completed", "shed") for r in done)
+    assert len(done) == 12                  # everyone is terminal somewhere
+
+
+def test_fault_free_config_unchanged_by_failure_plane():
+    """n_decode_workers=1, no faults: the failure machinery must be inert —
+    identical summaries to a pre-failure-plane run shape."""
+    a = DisaggregatedScheduler(_cfg())
+    b = DisaggregatedScheduler(_cfg(n_decode_workers=1, faults=None))
+    for r in _requests():
+        a.submit(r)
+    for r in _requests():
+        b.submit(r)
+    assert summarize(a.run()) == summarize(b.run())
+
+
+# ---------------------------------------------------------------------------
+# the acceptance chaos scenario (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+def test_chaos_end_to_end(small_cache):
+    """1% chunk corruption + one decode worker killed mid-run + a link
+    brownout: the run completes, surviving requests' KV is bit-identical to
+    the fault-free run, and the scheduler accounting is conserved with every
+    request terminal in exactly one state."""
+    cache, cb = small_cache
+    chaos = FaultPlan(seed=7, corrupt_p=0.01,
+                      worker_kills=(WorkerKill(worker=0, at=0.05),),
+                      brownouts=(LinkBrownout(start=0.05, stop=0.3,
+                                              factor=0.5),))
+
+    # data plane: repeated verified transfers under 1% corruption are
+    # bit-identical to the fault-free output
+    plan = TransferPlan.build(cache, TransferConfig(codebook=cb, n_chunks=8))
+    fault_free = plan.session().transfer(cache)
+    sess = plan.session(verify=True, faults=chaos)
+    injected = 0
+    for _ in range(8):
+        out = sess.transfer(cache)
+        _assert_cache_equal(out, fault_free)
+        injected += sess.last_stats.faults_injected
+    assert injected >= 1                    # the 1% rate actually fired
+
+    # control plane: kill + brownout; every request terminal in exactly one
+    # of completed/shed/failed-over, occupancy intervals disjoint
+    sched = DisaggregatedScheduler(_cfg(n_decode_workers=2, faults=chaos,
+                                        heartbeat_timeout_s=0.01))
+    reqs = _requests(16, seed=11)
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == len(reqs)
+    assert all(r.state in ("completed", "shed", "failed-over") for r in done)
+    assert sched.failovers >= 1
+    _check_conservation(sched, done)
+    out = summarize(done)
+    assert out["n"] + out["n_shed"] == len(reqs)

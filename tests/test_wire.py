@@ -35,7 +35,8 @@ def test_bf16_ratio_near_four_thirds():
 
 
 def test_wire_matches_ingraph_byte_accounting():
-    """Wire payload minus fixed header == in-graph analytic bytes."""
+    """Wire payload minus fixed header (incl. the integrity-frame table) ==
+    in-graph analytic bytes."""
     import jax
     import jax.numpy as jnp
     from repro.core import codec
@@ -46,7 +47,9 @@ def test_wire_matches_ingraph_byte_accounting():
     x = jax.lax.bitcast_convert_type(jnp.asarray(bits), jnp.bfloat16)
     ct = codec.encode(x, cb, cap=1024)
     ingraph = float(codec.compressed_bytes(ct))
-    header = wire._HEADER.size + cb.k + 4 * (64 * 1024 // wire.DEFAULT_CHUNK)
+    n_frames = wire._HEADER.unpack_from(payload, 0)[6]
+    header = (wire._HEADER.size + cb.k + 4 * n_frames
+              + 4 * (64 * 1024 // wire.DEFAULT_CHUNK))
     assert ingraph == pytest.approx(len(payload) - header)
 
 
