@@ -55,6 +55,7 @@ import argparse
 import os
 
 from repro.configs.base import get_config
+from repro.models.kvpool import bytes_per_token_resident
 from repro.core.profile import (PAPER_G_ENC, CalibratedProfile,
                                 resolve_calibration)
 from repro.serving.faults import FaultPlan, LinkBrownout, WorkerKill
@@ -250,6 +251,39 @@ def run(emit, policy: str | None = None) -> None:
                                    / max(with_c["mean_ttft_s"], 1e-12), 4),
                 reqs_speedup=round(with_c["throughput_req_s"]
                                    / max(without["throughput_req_s"], 1e-12), 4)))
+
+    # --- HBM-derived decode capacity (ISSUE 8) -----------------------------
+    # At a fixed decode-worker HBM budget the slot budget is derived from
+    # the resident KV footprint (SchedulerConfig.derived_decode_slots):
+    # 'raw' sizes a slot by the bf16 cache (2 B/elem), 'compressed' by the
+    # paged SplitZip format (kvpool.bytes_per_token_resident — 1.5 B/elem
+    # dense streams + page escape metadata).  Under contention the extra
+    # slots turn directly into request throughput.
+    cfg_arch = get_config("qwen3-32b")
+    m_tok = (cfg_arch.num_layers * 2
+             * cfg_arch.num_kv_heads * cfg_arch.head_dim)
+    raw_bpt = 2.0 * m_tok
+    comp_bpt = bytes_per_token_resident(m_tok, 1024)
+    hbm = 16 << 30                       # 16 GiB/worker reserved for KV
+    n_cap = 24 if SMOKE else 96
+    caps = {}
+    for label, bpt in (("raw", raw_bpt), ("compressed", comp_bpt)):
+        sched = _sched(batch=4, compress=True, profile=profile, dil=dil)
+        sched.cfg.hbm_bytes_per_worker = hbm
+        sched.cfg.resident_bytes_per_token = bpt
+        sched.cfg.slot_tokens = 8192
+        sched.max_decode_slots = sched.cfg.derived_decode_slots()
+        for i in range(n_cap):
+            sched.submit(Request(rid=i, arrival=i * 1e-4 * dil,
+                                 prompt_len=4096, max_new_tokens=32))
+        caps[label] = (sched.max_decode_slots, summarize(sched.run()))
+    (slots_r, out_r), (slots_c, out_c) = caps["raw"], caps["compressed"]
+    emit("fig2", "resident_capacity", dict(
+        hbm_gib=hbm >> 30, slot_tokens=8192,
+        slots_raw=slots_r, slots_compressed=slots_c,
+        slots_ratio=round(slots_c / max(1, slots_r), 4),
+        reqs_speedup=round(out_c["throughput_req_s"]
+                           / max(out_r["throughput_req_s"], 1e-12), 4)))
 
     # --- admission-policy sweep (ISSUE 5) ----------------------------------
     policies = (policy,) if policy else available_policies()

@@ -27,6 +27,7 @@ MODULES = [
     "fig3_transfer_sweeps",
     "fig4_breakdown",
     "fig5_layerwise",
+    "fig6_resident_capacity",
     "appendix_a_hiding",
     # needs 8 host devices: run as its own process (CI --only xpod_chunked);
     # skips gracefully inside a full in-process sweep

@@ -4,9 +4,12 @@ orders of magnitude of throughput (many small codebooks, irregular access)."""
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_config, generate_kv_bits, gbps, time_fn
+from repro.configs.base import get_config
 from repro.core import codebook as cbm
 from repro.core import wire
 
@@ -60,3 +63,34 @@ def run(emit) -> None:
             ratio=round(t2.nbytes / total_payload, 4),
             enc_gbps=round(gbps(nbytes, t_enc), 4),
             dec_gbps=round(gbps(nbytes, t_dec), 4)))
+
+    # --- resident page-size sweep (ISSUE 8) --------------------------------
+    # Granularity of the compressed-resident pool: small pages waste escape
+    # metadata (cap floor) and page-table entries and lengthen the kernel's
+    # sequential page walk; large pages waste HBM in the half-empty tail
+    # page every growing sequence holds.  The sweep justifies
+    # kvpool.DEFAULT_PAGE_BYTES (32 KiB): capacity at a 4096-token context
+    # is within ~1% of the best page size while the per-page decode tile
+    # stays VMEM-sized.
+    from repro.models import kvpool as KVP
+
+    full = get_config("qwen3-32b")
+    m = full.num_kv_heads * full.head_dim        # elems/token, one leaf
+    ctx = 4096
+    cache_geom = {
+        "k": jax.ShapeDtypeStruct((full.num_layers, 1, ctx,
+                                   full.num_kv_heads, full.head_dim),
+                                  jnp.bfloat16)}
+    for kib in (4, 8, 16, 32, 64, 128):
+        tp = KVP.tokens_per_page_for(cache_geom, 1024, kib * 1024)
+        bpt = KVP.bytes_per_token_resident(m, tp)
+        # per-sequence: full pages + table + the half-full tail page (raw)
+        pages = ctx // tp
+        per_seq = pages * bpt * tp + pages * 4 + tp * m * 2 / 2
+        raw_seq = ctx * m * 2
+        emit("table5", f"page/{kib}KiB", dict(
+            tokens_per_page=tp,
+            bytes_per_token=round(bpt, 3),
+            tail_waste_pct=round(100 * (tp * m) / (ctx * m * 2 / 2), 3),
+            capacity_ratio=round(raw_seq / per_seq, 4),
+            default=int(kib * 1024 == KVP.DEFAULT_PAGE_BYTES)))

@@ -1,0 +1,458 @@
+"""Fused Pallas attention over splitzip-compressed KV pages (ROADMAP item 1).
+
+The decode worker keeps its KV cache *compressed at rest* (models/kvpool.py:
+fixed-size, codec-chunk-aligned pages holding the splitzip streams — dense
+sign-mantissa + nibble-packed exponent codes + a page-level sparse escape
+list).  This kernel is the consumer: one ``pallas_call`` per attention layer
+walks a sequence's page table with **scalar prefetch** (the page id read from
+SMEM feeds the BlockSpec index map, so each grid step DMAs exactly one
+physical page's streams into VMEM), decodes the K and V tiles **in
+register** — dense exponent-stream load via the `splitzip_decode` machinery
+(`_unpack_and_lut` + `_assemble`) plus the predicated per-slot escape patch —
+and runs the standard flash accumulation (f32 m/l/acc scratch) over the
+decoded tiles.  HBM traffic for the K/V streams is therefore the *compressed*
+bytes (~1.51 B/elem vs 2 B raw); raw bf16 K/V never exists in HBM.
+
+Shapes and conventions:
+
+* grid = (B, P) with P = max pages per sequence; the page axis is the
+  innermost (sequential) axis, accumulating into scratch like the ``ki`` loop
+  of ``kernels/flash_attention.py``.
+* pages are always FULL (``tokens_per_page`` tokens): decode-time growth
+  lands in a raw tail page attended separately (``tail_partials``) and merged
+  with ``merge_partials`` — so no intra-page length masking is needed, only
+  the per-row valid-page count ``n_full = cache_len // tokens_per_page``.
+* the kernel returns UN-normalized partials ``(acc, m, l)`` so the caller can
+  merge the tail (and the just-appended token) before the single normalize.
+* causal semantics: queries sit at absolute positions
+  ``cache_len - nq + 1 + j``; full pages hold positions ``< n_full * Tp <=
+  cache_len``, so for single-token decode (nq == 1) every admitted page is
+  visible and the mask is a no-op; for multi-token (speculative) queries the
+  in-kernel mask ``t_pos <= q_pos`` applies.
+* escape-capacity overflow never reaches this kernel: admission/flush demote
+  the batch to a raw-resident ``DecodeState`` (rehydrate-then-
+  ``flash_attention``) before any page with more than ``cap`` escapes exists
+  (see ``DisaggregatedEngine`` resident wiring).
+
+Like every kernel in this repo the parity surface is interpret mode on CPU;
+real-TPU lane/sublane alignment of the (nq, H) output tiles is tracked under
+ROADMAP "hardware validation".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.codebook import FORMATS
+from repro.kernels.splitzip_decode import _assemble, _unpack_and_lut
+
+NEG_INF = -1e30
+
+
+def _bits_uint(fmt: str):
+    return jnp.uint16 if FORMATS[fmt]["bits"] == 16 else jnp.uint8
+
+
+def _float_dtype(fmt: str):
+    if FORMATS[fmt]["bits"] == 16:
+        return jnp.bfloat16
+    return jnp.float8_e5m2 if fmt == "fp8_e5m2" else jnp.float8_e4m3fn
+
+
+# ---------------------------------------------------------------------------
+# in-register page decode (the splitzip_decode machinery, page-level escapes)
+# ---------------------------------------------------------------------------
+
+def _decode_page_tile(packed_ref, sm_ref, pos_ref, val_ref, cnt_ref, bits_sc,
+                      *, exponents, mbits, bits_width, chunk, cap):
+    """Decode ONE page's streams into ``bits_sc`` and return the bit tile.
+
+    Dense phase: nibble unpack + one-hot codebook contraction + bit assembly
+    (identical math to ``splitzip_decode._decode_fused_kernel``).  Sparse
+    phase: the page-level escape list — ``cap`` statically-unrolled slots,
+    predicated by ``pl.when(j < count)`` so only occupied slots execute; slot
+    ``j`` broadcasts its page-relative position across the (rows, lanes) tile
+    and selects the exponent field where ``row == pos // chunk and lane ==
+    pos % chunk`` (padding entries carry ``pos == page_elems`` and can never
+    match)."""
+    packed = packed_ref[0].astype(jnp.int32)          # (pc, chunk//2)
+    a = sm_ref[0].astype(jnp.int32)                   # (pc, chunk)
+    e = _unpack_and_lut(packed, exponents=exponents)
+    pc = a.shape[0]                                   # scratch may be taller
+    bits_sc[0:pc, :] = _assemble(e, a, mbits=mbits, bits_width=bits_width)
+
+    cnt = cnt_ref[0, 0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (pc, chunk), 0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (pc, chunk), 1)
+    keep = ((1 << bits_width) - 1) ^ (((1 << (bits_width - mbits - 1)) - 1)
+                                      << mbits)
+    for j in range(cap):  # static unroll; predicated off beyond the count
+        @pl.when(j < cnt)
+        def _(j=j):
+            p = pos_ref[0, j].astype(jnp.int32)       # page-relative
+            v = val_ref[0, j].astype(jnp.int32)
+            hit = (row == p // chunk) & (lane == p % chunk)
+            cur = bits_sc[0:pc, :]
+            bits_sc[0:pc, :] = jnp.where(hit, (cur & keep) | (v << mbits),
+                                         cur)
+    return bits_sc[0:pc, :]
+
+
+def _bits_to_float(bits, fmt: str):
+    """(rows, chunk) i32 bit tile -> f32 values."""
+    u = bits.astype(_bits_uint(fmt))
+    return jax.lax.bitcast_convert_type(u, _float_dtype(fmt)).astype(
+        jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# the fused paged-GQA kernel
+# ---------------------------------------------------------------------------
+
+def _paged_gqa_kernel(
+    # scalar prefetch
+    pt_k, pt_v, lens,
+    # tensor inputs
+    q_ref,
+    k_sm, k_packed, k_pos, k_val, k_cnt,
+    v_sm, v_packed, v_pos, v_val, v_cnt,
+    # outputs
+    acc_ref, m_ref, l_ref,
+    # scratch
+    bits_sc, m_sc, l_sc, acc_sc,
+    *, exponents, mbits, bits_width, chunk, cap, tokens_per_page,
+    hkv, head_dim, dv, causal, scale, fmt,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    n_pages = pl.num_programs(1)
+    nq, h = q_ref.shape[1], q_ref.shape[2]
+    g = h // hkv
+
+    @pl.when(p == 0)
+    def _():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    n_full = lens[b, 0]
+    cache_len = lens[b, 1]
+
+    @pl.when(p < n_full)
+    def _():
+        k_bits = _decode_page_tile(k_packed, k_sm, k_pos, k_val, k_cnt,
+                                   bits_sc, exponents=exponents, mbits=mbits,
+                                   bits_width=bits_width, chunk=chunk, cap=cap)
+        k_tile = _bits_to_float(k_bits, fmt).reshape(
+            tokens_per_page, hkv, head_dim)
+        v_bits = _decode_page_tile(v_packed, v_sm, v_pos, v_val, v_cnt,
+                                   bits_sc, exponents=exponents, mbits=mbits,
+                                   bits_width=bits_width, chunk=chunk, cap=cap)
+        v_tile = _bits_to_float(v_bits, fmt).reshape(tokens_per_page, hkv, dv)
+
+        q = q_ref[0].astype(jnp.float32).reshape(nq, hkv, g, head_dim)
+        s = jnp.einsum("qhgd,thd->qhgt", q, k_tile,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            t_pos = p * tokens_per_page + jnp.arange(tokens_per_page)
+            q_pos = cache_len - (nq - 1) + jnp.arange(nq)
+            mask = t_pos[None, :] <= q_pos[:, None]          # (nq, Tp)
+            s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+
+        m_prev = m_sc[...]                                   # (nq, hkv, g)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + pexp.sum(axis=-1)
+        pv = jnp.einsum("qhgt,thd->qhgd", pexp, v_tile,
+                        preferred_element_type=jnp.float32)
+        acc_sc[...] = acc_sc[...] * corr[..., None] + pv
+        m_sc[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _():
+        acc_ref[0] = acc_sc[...].reshape(nq, h, dv)
+        m_ref[0] = m_sc[...].reshape(nq, h)
+        l_ref[0] = l_sc[...].reshape(nq, h)
+
+
+def _stream_specs(pc, chunk, cap, table):
+    """BlockSpecs for one paged leaf's five stream arrays, indexed through a
+    scalar-prefetched page table (``table`` picks which prefetch ref)."""
+    def page(b, p, ptk, ptv, lens):
+        t = ptk if table == 0 else ptv
+        return (jnp.maximum(t[b, p], 0), 0, 0)
+
+    def page2(b, p, ptk, ptv, lens):
+        t = ptk if table == 0 else ptv
+        return (jnp.maximum(t[b, p], 0), 0)
+
+    return [
+        pl.BlockSpec((1, pc, chunk), page),           # sign_mantissa
+        pl.BlockSpec((1, pc, chunk // 2), page),      # packed
+        pl.BlockSpec((1, cap), page2),                # esc_pos
+        pl.BlockSpec((1, cap), page2),                # esc_val
+        pl.BlockSpec((1, 1), page2),                  # esc_cnt
+    ]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("exponents", "fmt", "chunk", "tokens_per_page", "hkv",
+                     "causal", "scale", "interpret"),
+)
+def paged_gqa_attention(
+    q: jax.Array,                   # (B, nq, H, hd)
+    k_streams, v_streams,           # 5-tuples: sm, packed, pos, val, cnt
+    page_table_k: jax.Array,        # (B, P) i32; -1 = unmapped
+    page_table_v: jax.Array,
+    cache_len: jax.Array,           # (B,) i32 tokens covered by pages+tail
+    *, exponents: tuple, fmt: str = "bf16", chunk: int,
+    tokens_per_page: int, hkv: int, causal: bool = True,
+    scale: float | None = None, interpret: bool = True,
+):
+    """Fused attention over compressed pages -> un-normalized partials.
+
+    Returns ``(acc, m, l)`` with ``acc (B, nq, H, dv) f32``, ``m/l (B, nq, H)
+    f32`` covering the FULL pages only (``cache_len // tokens_per_page`` per
+    row); merge the raw tail page via :func:`tail_partials` +
+    :func:`merge_partials`, then :func:`finalize`."""
+    spec = FORMATS[fmt]
+    b, nq, h, hd = q.shape
+    n_pages_max = page_table_k.shape[1]
+    k_sm, k_packed, k_pos, k_val, k_cnt = k_streams
+    v_sm, v_packed, v_pos, v_val, v_cnt = v_streams
+    pc = k_sm.shape[1]
+    cap = k_pos.shape[1]
+    m_per_tok_v = (v_sm.shape[1] * v_sm.shape[2]) // tokens_per_page
+    dv = m_per_tok_v // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    n_full = cache_len // tokens_per_page
+    lens = jnp.stack([n_full, cache_len], axis=1).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_gqa_kernel,
+        exponents=tuple(int(e) for e in exponents), mbits=spec["mbits"],
+        bits_width=spec["bits"], chunk=chunk, cap=cap,
+        tokens_per_page=tokens_per_page, hkv=hkv, head_dim=hd, dv=dv,
+        causal=causal, scale=float(scale), fmt=fmt,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, n_pages_max),
+        in_specs=[
+            pl.BlockSpec((1, nq, h, hd), lambda b_, p_, *s: (b_, 0, 0, 0)),
+            *_stream_specs(pc, chunk, cap, table=0),
+            *_stream_specs(pc, chunk, cap, table=1),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nq, h, dv), lambda b_, p_, *s: (b_, 0, 0, 0)),
+            pl.BlockSpec((1, nq, h), lambda b_, p_, *s: (b_, 0, 0)),
+            pl.BlockSpec((1, nq, h), lambda b_, p_, *s: (b_, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((pc, chunk), jnp.int32),
+            pltpu.VMEM((nq, hkv, h // hkv), jnp.float32),
+            pltpu.VMEM((nq, hkv, h // hkv), jnp.float32),
+            pltpu.VMEM((nq, hkv, h // hkv, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nq, h, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, nq, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, nq, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table_k, page_table_v, lens, q,
+      k_sm, k_packed, k_pos, k_val, k_cnt,
+      v_sm, v_packed, v_pos, v_val, v_cnt)
+
+
+# ---------------------------------------------------------------------------
+# the fused paged-MLA kernel (absorbed-form decode over latent pages)
+# ---------------------------------------------------------------------------
+
+def _paged_mla_kernel(
+    pt_ckv, pt_kr, lens,
+    ql_ref, qr_ref,
+    c_sm, c_packed, c_pos, c_val, c_cnt,
+    r_sm, r_packed, r_pos, r_val, r_cnt,
+    acc_ref, m_ref, l_ref,
+    bits_sc, m_sc, l_sc, acc_sc,
+    *, exponents, mbits, bits_width, chunk, cap, tokens_per_page,
+    kv_rank, rope_dim, causal, scale, fmt,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    n_pages = pl.num_programs(1)
+    nq, h = ql_ref.shape[1], ql_ref.shape[2]
+
+    @pl.when(p == 0)
+    def _():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    n_full = lens[b, 0]
+    cache_len = lens[b, 1]
+
+    @pl.when(p < n_full)
+    def _():
+        c_bits = _decode_page_tile(c_packed, c_sm, c_pos, c_val, c_cnt,
+                                   bits_sc, exponents=exponents, mbits=mbits,
+                                   bits_width=bits_width, chunk=chunk, cap=cap)
+        ckv = _bits_to_float(c_bits, fmt).reshape(tokens_per_page, kv_rank)
+        r_bits = _decode_page_tile(r_packed, r_sm, r_pos, r_val, r_cnt,
+                                   bits_sc, exponents=exponents, mbits=mbits,
+                                   bits_width=bits_width, chunk=chunk, cap=cap)
+        krope = _bits_to_float(r_bits, fmt).reshape(tokens_per_page, rope_dim)
+
+        ql = ql_ref[0].astype(jnp.float32)                 # (nq, H, r)
+        qr = qr_ref[0].astype(jnp.float32)                 # (nq, H, p)
+        s = (jnp.einsum("qhr,tr->qht", ql, ckv,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("qhp,tp->qht", qr, krope,
+                          preferred_element_type=jnp.float32)) * scale
+        if causal:
+            t_pos = p * tokens_per_page + jnp.arange(tokens_per_page)
+            q_pos = cache_len - (nq - 1) + jnp.arange(nq)
+            mask = t_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(mask[:, None, :], s, NEG_INF)
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + pexp.sum(axis=-1)
+        pv = jnp.einsum("qht,tr->qhr", pexp, ckv,
+                        preferred_element_type=jnp.float32)
+        acc_sc[...] = acc_sc[...] * corr[..., None] + pv
+        m_sc[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _():
+        acc_ref[0] = acc_sc[...]
+        m_ref[0] = m_sc[...]
+        l_ref[0] = l_sc[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("exponents", "fmt", "chunk", "tokens_per_page",
+                     "causal", "scale", "interpret"),
+)
+def paged_mla_attention(
+    q_lat: jax.Array,               # (B, nq, H, kv_rank) absorbed query
+    q_rope: jax.Array,              # (B, nq, H, rope_dim)
+    ckv_streams, krope_streams,     # 5-tuples
+    page_table_ckv: jax.Array, page_table_krope: jax.Array,
+    cache_len: jax.Array,
+    *, exponents: tuple, fmt: str = "bf16", chunk: int,
+    tokens_per_page: int, scale: float, causal: bool = True,
+    interpret: bool = True,
+):
+    """Absorbed-form MLA attention over compressed latent pages.
+
+    Scores are ``q_lat . ckv + q_rope . krope``; the context is accumulated
+    over the decoded ``ckv`` tile, so ``acc`` is latent-space ``(B, nq, H,
+    kv_rank)`` and the caller applies the ``w_v``/``wo`` up-projections after
+    the tail merge (exactly ``mla.mla_decode``'s structure)."""
+    spec = FORMATS[fmt]
+    b, nq, h, kv_rank = q_lat.shape
+    rope_dim = q_rope.shape[-1]
+    n_pages_max = page_table_ckv.shape[1]
+    c_sm = ckv_streams[0]
+    r_sm = krope_streams[0]
+    pc_c, pc_r = c_sm.shape[1], r_sm.shape[1]
+    cap = ckv_streams[2].shape[1]
+    n_full = cache_len // tokens_per_page
+    lens = jnp.stack([n_full, cache_len], axis=1).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_mla_kernel,
+        exponents=tuple(int(e) for e in exponents), mbits=spec["mbits"],
+        bits_width=spec["bits"], chunk=chunk, cap=cap,
+        tokens_per_page=tokens_per_page, kv_rank=kv_rank, rope_dim=rope_dim,
+        causal=causal, scale=float(scale), fmt=fmt,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, n_pages_max),
+        in_specs=[
+            pl.BlockSpec((1, nq, h, kv_rank), lambda b_, p_, *s: (b_, 0, 0, 0)),
+            pl.BlockSpec((1, nq, h, rope_dim), lambda b_, p_, *s: (b_, 0, 0, 0)),
+            *_stream_specs(pc_c, chunk, cap, table=0),
+            *_stream_specs(pc_r, chunk, cap, table=1),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nq, h, kv_rank), lambda b_, p_, *s: (b_, 0, 0, 0)),
+            pl.BlockSpec((1, nq, h), lambda b_, p_, *s: (b_, 0, 0)),
+            pl.BlockSpec((1, nq, h), lambda b_, p_, *s: (b_, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((max(pc_c, pc_r), chunk), jnp.int32),
+            pltpu.VMEM((nq, h), jnp.float32),
+            pltpu.VMEM((nq, h), jnp.float32),
+            pltpu.VMEM((nq, h, kv_rank), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nq, h, kv_rank), jnp.float32),
+            jax.ShapeDtypeStruct((b, nq, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, nq, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table_ckv, page_table_krope, lens, q_lat, q_rope,
+      *ckv_streams, *krope_streams)
+
+
+# ---------------------------------------------------------------------------
+# tail partials + softmax-partial merge (shared by both families)
+# ---------------------------------------------------------------------------
+
+def tail_partials(s: jax.Array, v: jax.Array, valid: jax.Array):
+    """Un-normalized flash partials for the raw tail page.
+
+    ``s``: (B, nq, ..., T) f32 scores (already scaled), ``v``: (B, T, dv) or
+    (B, T, hkv, dv) values, ``valid``: (B, T) bool.  Returns (acc, m, l)
+    shaped like the kernel partials so :func:`merge_partials` composes."""
+    extra = s.ndim - 3                                     # dims between nq and T
+    vm = valid.reshape(valid.shape[0], *([1] * (extra + 1)), valid.shape[1])
+    s = jnp.where(vm, s, NEG_INF)
+    m = s.max(axis=-1)
+    pexp = jnp.exp(s - m[..., None])
+    l = pexp.sum(axis=-1)
+    if v.ndim == 3:                                        # (B, T, dv) latent
+        acc = jnp.einsum("bqht,btd->bqhd", pexp, v,
+                         preferred_element_type=jnp.float32)
+    else:                                                  # (B, T, hkv, dv)
+        acc = jnp.einsum("bqhgt,bthd->bqhgd", pexp, v,
+                         preferred_element_type=jnp.float32)
+    return acc, m, l
+
+
+def merge_partials(a, b):
+    """Combine two un-normalized flash partials (acc, m, l)."""
+    acc_a, m_a, l_a = a
+    acc_b, m_b, l_b = b
+    m = jnp.maximum(m_a, m_b)
+    ca = jnp.exp(m_a - m)
+    cb = jnp.exp(m_b - m)
+    return (acc_a * ca[..., None] + acc_b * cb[..., None],
+            m, l_a * ca + l_b * cb)
+
+
+def finalize(acc, l, dtype=jnp.bfloat16):
+    return (acc / jnp.maximum(l[..., None], 1e-30)).astype(dtype)

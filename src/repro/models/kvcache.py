@@ -28,8 +28,27 @@ from repro.configs.base import ArchConfig
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class DecodeState:
+    """Raw decode-worker state.
+
+    ``cache_len`` is PER ROW: a mixed-length (ragged) batch right-pads each
+    row to the padded sequence length, and every consumer — decode
+    attention's validity mask, transfer accounting, the resident pool's
+    page tables — must read the per-row length, never the padded S.
+    ``models.model.prefill`` builds it from ``batch['lengths']`` (scoring
+    each row's logits at its own last real token).  The compressed-resident
+    analogue is :class:`repro.models.kvpool.ResidentState`, which carries
+    the same (B,) vector next to page tables instead of a raw cache."""
     cache: dict
-    cache_len: jax.Array  # (B,) int32 — valid prefix length
+    cache_len: jax.Array  # (B,) int32 — valid prefix length per row
+
+    def valid_mask(self, max_seq: Optional[int] = None) -> jax.Array:
+        """(B, S) bool — True where the cache holds a real token.  Only
+        meaningful for families with a sequence axis (dense/moe/vlm/mla);
+        S defaults to the cache's own sequence length."""
+        if max_seq is None:
+            max_seq = max(v.shape[2] for v in self.cache.values()
+                          if v.ndim >= 3)
+        return jnp.arange(max_seq)[None, :] < self.cache_len[:, None]
 
 
 def n_triples_extra(cfg: ArchConfig):

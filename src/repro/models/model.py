@@ -301,10 +301,28 @@ def prefill(params, batch: Dict, cfg: ArchConfig, *, max_seq: Optional[int] = No
     """Run the full prompt; return (last-position logits, decode state).
 
     For cache-positional families (dense/mla) the cache is padded to
-    ``max_seq`` slots so decode can continue in place."""
+    ``max_seq`` slots so decode can continue in place.
+
+    Ragged batches: ``batch["lengths"]`` (B,) marks each row's true prompt
+    length; rows are right-padded to a common S.  Causal attention keeps each
+    row's valid prefix independent of its padding, so the fix is purely
+    positional: last-token logits are gathered at ``lengths - 1`` (not at the
+    padded position S-1) and ``cache_len`` starts at ``lengths`` (decode then
+    overwrites the padding slots row by row).  Recurrent families (ssm /
+    hybrid) absorb padding into their state and reject ragged input."""
+    lengths = batch.get("lengths")
+    if lengths is not None:
+        if cfg.ssm is not None or cfg.hybrid is not None:
+            raise ValueError(
+                f"{cfg.name}: ragged prefill (batch['lengths']) needs a "
+                "cache-positional family (dense/mla); recurrent state "
+                "absorbs right-padding")
+        if cfg.frontend is not None or cfg.encoder_only:
+            raise ValueError("ragged prefill is token-decoder only")
     logits, cache, _ = forward(
         params, batch, cfg, kv_block=kv_block, collect_cache=True,
-        logits_positions="all" if cfg.encoder_only else "last")
+        logits_positions="all" if (cfg.encoder_only or lengths is not None)
+        else "last")
     if cfg.frontend == "vision_patches":
         s = batch["tokens"].shape[1] + cfg.frontend_len
         b = batch["tokens"].shape[0]
@@ -324,6 +342,11 @@ def prefill(params, batch: Dict, cfg: ArchConfig, *, max_seq: Optional[int] = No
             widths[2] = (0, pad)
             return jnp.pad(x, widths)
         cache = jax.tree.map(pad_seq, cache)
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        last = jnp.take_along_axis(
+            logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+        return last, DecodeState(cache=cache, cache_len=lengths)
     return logits[:, -1], DecodeState(
         cache=cache, cache_len=jnp.full((b,), s, jnp.int32))
 
@@ -454,6 +477,82 @@ def decode_step(params, tokens: jax.Array, state: DecodeState, cfg: ArchConfig
 
     logits = lm_logits(params, x, cfg)[:, -1]
     return logits, DecodeState(cache=new_cache, cache_len=cache_len + 1)
+
+
+def resident_decode_step(params, tokens: jax.Array, state, cfg: ArchConfig,
+                         *, interpret: bool = True):
+    """One autoregressive step over a compressed-resident cache.
+
+    ``state`` is a ``kvpool.ResidentState``: the prefix lives as splitzip
+    pages consumed directly by the fused Pallas attention kernel (one
+    ``pallas_call`` per layer), and the step only grows the raw tail pages —
+    the compressed pool is read-only here and tail flushes/recompression are
+    host-side between steps (``KVPool.flush_full_tails``).  Dense-GQA and MLA
+    families only; others decode raw-resident."""
+    import dataclasses
+
+    from repro.models import kvpool as KVP
+
+    if cfg.encoder_only:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    g = state.geom
+    x = params["embed"][tokens]
+    x = constrain(x, "btd")
+    cache_len = state.cache_len
+
+    if cfg.mla is not None:
+        cl, rl = state.leaves["ckv"], state.leaves["krope"]
+        c_streams, r_streams = cl.streams(), rl.streams()
+        fmt = g.leaf("ckv").fmt
+
+        def layer_step(carry, xs):
+            lp, pt_c, pt_r, tc, tr = xs
+            h = L.rms_norm(carry, lp["norm1"], cfg.norm_eps)
+            out, (tc, tr) = KVP.paged_mla_decode(
+                lp["attn"], h, c_streams, r_streams, pt_c, pt_r, tc, tr,
+                cache_len, cfg.mla, cfg.rope_theta, geom=g, fmt=fmt,
+                interpret=interpret)
+            h2 = L.rms_norm(carry + out, lp["norm2"], cfg.norm_eps)
+            y = carry + out + (MOE.moe_ffn(lp["ffn"], h2, cfg.moe)[0]
+                               if cfg.moe else L.mlp(lp["ffn"], h2))
+            return constrain(y, "btd"), (tc, tr)
+
+        x, (tcs, trs) = scanctl.scan(
+            layer_step, x, (params["layers"], cl.page_table, rl.page_table,
+                            cl.tail, rl.tail))
+        new_leaves = {"ckv": dataclasses.replace(cl, tail=tcs),
+                      "krope": dataclasses.replace(rl, tail=trs)}
+    elif cfg.ssm is None and cfg.hybrid is None:
+        kl, vl = state.leaves["k"], state.leaves["v"]
+        k_streams, v_streams = kl.streams(), vl.streams()
+        fmt = g.leaf("k").fmt
+
+        def layer_step(carry, xs):
+            lp, pt_k, pt_v, tk, tv = xs
+            h = L.rms_norm(carry, lp["norm1"], cfg.norm_eps)
+            out, (tk, tv) = KVP.paged_decode_attention_block(
+                lp["attn"], h, k_streams, v_streams, pt_k, pt_v, tk, tv,
+                cache_len, cfg.rope_theta, geom=g, fmt=fmt,
+                interpret=interpret)
+            y = carry + out
+            h2 = L.rms_norm(y, lp["norm2"], cfg.norm_eps)
+            ffn = (MOE.moe_ffn(lp["ffn"], h2, cfg.moe)[0] if cfg.moe
+                   else L.mlp(lp["ffn"], h2))
+            return constrain(y + ffn, "btd"), (tk, tv)
+
+        x, (tks, tvs) = scanctl.scan(
+            layer_step, x, (params["layers"], kl.page_table, vl.page_table,
+                            kl.tail, vl.tail))
+        new_leaves = {"k": dataclasses.replace(kl, tail=tks),
+                      "v": dataclasses.replace(vl, tail=tvs)}
+    else:
+        raise ValueError(
+            f"{cfg.name}: resident-compressed decode supports dense-GQA and "
+            "MLA caches; ssm/hybrid decode raw-resident")
+
+    logits = lm_logits(params, x, cfg)[:, -1]
+    return logits, dataclasses.replace(
+        state, leaves=new_leaves, cache_len=cache_len + 1)
 
 
 # ---------------------------------------------------------------------------

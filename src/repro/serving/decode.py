@@ -45,3 +45,45 @@ def make_decode_fn(cfg: ArchConfig, num_steps: int):
     def fn(params, first_token, state):
         return decode_loop(params, first_token, state, cfg, num_steps)
     return fn
+
+
+def resident_decode_loop(params, first_token: jax.Array, state, pool,
+                         cfg: ArchConfig, num_steps: int, *,
+                         interpret: bool = True):
+    """Greedy generation over a compressed-resident cache.
+
+    A Python loop of one reused jitted step (page tables and tails are
+    fixed-shape, so every step hits the same executable) with a host-side
+    tail recompression between steps: rows whose raw tail page filled are
+    flushed into fresh compressed pages through the registered backend
+    (``KVPool.flush_full_tails``).  The jitted step itself never touches the
+    codec — the fused kernel decodes pages in-register.
+
+    Escape overflow or pool exhaustion during a flush demotes the WHOLE
+    batch: the pool rehydrates (bit-exact) to a raw ``DecodeState`` and the
+    remaining steps run the classic decode loop.  Returns ``(tokens (B, N),
+    final_state, demoted)``."""
+    from repro.models.kvpool import ResidencyError
+
+    @jax.jit
+    def step_fn(p, tok, st):
+        return M.resident_decode_step(p, tok, st, cfg, interpret=interpret)
+
+    tok = first_token
+    toks = []
+    st = state
+    for i in range(num_steps):
+        logits, st = step_fn(params, tok[:, None], st)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks.append(tok)
+        try:
+            st = pool.flush_full_tails(st)
+        except ResidencyError:
+            cache = pool.rehydrate(st)
+            dst = DecodeState(cache=cache, cache_len=st.cache_len)
+            remaining = num_steps - (i + 1)
+            if remaining:
+                rest, dst = decode_loop(params, tok, dst, cfg, remaining)
+                toks.extend(rest[:, j] for j in range(rest.shape[1]))
+            return jnp.stack(toks, axis=1), dst, True
+    return jnp.stack(toks, axis=1), st, False

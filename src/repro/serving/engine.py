@@ -72,6 +72,20 @@ class EngineStats:
     refetches: int = 0
     raw_refetches: int = 0
     faults_injected: int = 0
+    # compressed-resident KV (resident="compressed"): batches admitted into
+    # the paged pool without rehydration, batches demoted to raw residency
+    # (unsupported stream/family, escape overflow, pool exhaustion), and the
+    # pool's HBM footprint vs what the same cache costs raw-resident
+    resident_admits: int = 0
+    resident_demotions: int = 0
+    resident_hbm_bytes: float = 0.0
+    resident_raw_bytes: float = 0.0
+
+    @property
+    def resident_ratio(self) -> float:
+        """raw-resident / compressed-resident HBM bytes — the decode-worker
+        capacity multiplier (fig6)."""
+        return self.resident_raw_bytes / max(self.resident_hbm_bytes, 1.0)
 
     @property
     def transfer_ratio(self) -> float:
@@ -95,7 +109,20 @@ class DisaggregatedEngine:
                  backend: str = "xla", n_chunks: int = 1,
                  compress_fp32: bool = False,
                  profile: Optional[CodecProfile] = None,
-                 verify: bool = False, faults=None):
+                 verify: bool = False, faults=None,
+                 resident: str = "raw", page_bytes: Optional[int] = None):
+        if resident not in ("raw", "compressed"):
+            raise ValueError(f"resident={resident!r}: expected 'raw' or "
+                             "'compressed'")
+        if resident == "compressed":
+            # the pool consumes page-addressable in-graph streams: whole
+            # tensors (chunked transfer re-segments leaves) from a jittable
+            # backend, with compression actually on
+            if n_chunks != 1:
+                raise ValueError("resident='compressed' requires n_chunks=1 "
+                                 "(chunked streams are not page-addressable)")
+            if not compress:
+                raise ValueError("resident='compressed' requires compress=True")
         self.cfg = cfg
         self.params = params
         self.tc = T.TransferConfig(codebook=codebook, chunk=chunk, cap=cap,
@@ -108,8 +135,11 @@ class DisaggregatedEngine:
         # faults injects a seeded FaultPlan (repro.serving.faults)
         self.verify = verify
         self.faults = faults
+        self.resident = resident
+        self.page_bytes = page_bytes
         self.stats = EngineStats()
         self._session: Optional[TransferSession] = None
+        self._pool = None   # KVPool of the last admitted batch
 
     # -- plan/session caching ------------------------------------------------
     def _session_for(self, cache) -> TransferSession:
@@ -197,8 +227,13 @@ class DisaggregatedEngine:
             self.stats.wire_bytes += raw
             return state
         sess = self._session_for(state.cache)
+        if self.resident == "compressed":
+            return self._transfer_resident(sess, state)
         cache = sess.transfer(state.cache, check=False)
-        cstats = sess.last_stats
+        self._absorb_transfer_stats(sess.last_stats, state)
+        return DecodeState(cache=cache, cache_len=state.cache_len)
+
+    def _absorb_transfer_stats(self, cstats, state: DecodeState) -> None:
         self.stats.wire_bytes += cstats.wire_bytes
         self.stats.codec_ok &= cstats.all_ok
         self.stats.chunk_retries += cstats.n_retries
@@ -221,11 +256,61 @@ class DisaggregatedEngine:
             obs[1] += cstats.n_retries
         if self.tc.n_chunks > 1:
             self.stats.chunk_wire_bytes.extend(cstats.chunk_wire_bytes)
-        return DecodeState(cache=cache, cache_len=state.cache_len)
 
-    def decode(self, first_token: jax.Array, state: DecodeState,
-               num_steps: int) -> jax.Array:
-        toks, _ = decode_loop(self.params, first_token, state, self.cfg, num_steps)
+    def resident_tokens_per_page(self, batch: int = 1) -> int:
+        """Page granularity the pool will use for this arch (max_seq must be
+        a multiple; ``generate`` rounds up automatically)."""
+        from repro.models import kvcache as KC
+        from repro.models import kvpool as KVP
+        cache = jax.eval_shape(
+            lambda: KC.init_cache(self.cfg, batch, 8 * self.tc.chunk))
+        return KVP.tokens_per_page_for(
+            cache, self.tc.chunk, self.page_bytes or KVP.DEFAULT_PAGE_BYTES)
+
+    def _transfer_resident(self, sess, state: DecodeState):
+        """Admit the wire streams into a paged pool — no rehydration.
+
+        Any inadmissible stream (raw-fallback leaf, layout/codebook drift,
+        page-escape overflow, non-page-aligned max_seq) demotes THIS batch to
+        raw residency: the already-received streams decode once
+        (rehydrate-then-reference fallback) and decode runs the classic
+        path.  Losslessness is unconditional either way."""
+        from repro.core.backend import resolve_backend
+        from repro.models import kvpool as KVP
+        from repro.serving.session import decode_leaves
+
+        comp, raw = sess.transfer_compressed(state.cache, check=False)
+        self._absorb_transfer_stats(sess.last_stats, state)
+        try:
+            pool = KVP.KVPool.for_cache(
+                state.cache, self.tc.codebook,
+                resolve_backend(self.tc.backend, require_jittable=True),
+                chunk=self.tc.chunk,
+                page_bytes=self.page_bytes or KVP.DEFAULT_PAGE_BYTES)
+            rst = pool.admit_from_wire(comp, state.cache_len)
+        except KVP.ResidencyError:
+            self.stats.resident_demotions += 1
+            cache = decode_leaves(comp, raw, state.cache,
+                                  backend=self.tc.backend)
+            return DecodeState(cache=cache, cache_len=state.cache_len)
+        self._pool = pool
+        self.stats.resident_admits += 1
+        self.stats.resident_hbm_bytes += pool.hbm_bytes()
+        self.stats.resident_raw_bytes += pool.raw_bytes()
+        return rst
+
+    def decode(self, first_token: jax.Array, state, num_steps: int
+               ) -> jax.Array:
+        from repro.models.kvpool import ResidentState
+        from repro.serving.decode import resident_decode_loop
+        if isinstance(state, ResidentState):
+            toks, _, demoted = resident_decode_loop(
+                self.params, first_token, state, self._pool, self.cfg,
+                num_steps)
+            self.stats.resident_demotions += int(demoted)
+        else:
+            toks, _ = decode_loop(self.params, first_token, state, self.cfg,
+                                  num_steps)
         self.stats.decode_tokens += int(toks.size)
         return toks
 
@@ -233,6 +318,15 @@ class DisaggregatedEngine:
     def generate(self, batch: Dict, num_steps: int,
                  max_seq: Optional[int] = None) -> jax.Array:
         """prompt batch -> (B, 1 + num_steps) generated ids (greedy)."""
+        if self.resident == "compressed":
+            # pages are fixed-size: pad the cache to a page multiple.  The
+            # default max_seq (prompt + first token + decode steps) must be
+            # derived HERE — prefill's own default (the raw prompt length)
+            # is almost never page-aligned and would demote every batch.
+            tp = self.resident_tokens_per_page()
+            if max_seq is None:
+                max_seq = batch["tokens"].shape[1] + 1 + num_steps
+            max_seq = -(-max_seq // tp) * tp
         pre = self.prefill(batch, max_seq=max_seq)
         state = self.transfer(pre.state)
         toks = self.decode(pre.first_token, state, num_steps)

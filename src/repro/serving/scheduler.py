@@ -131,6 +131,10 @@ class Request:
 @dataclasses.dataclass
 class SchedulerConfig:
     max_prefill_batch: int = 8
+    # flat decode-slot budget; superseded by the HBM-derived capacity below
+    # whenever ``hbm_bytes_per_worker`` is set (ISSUE 8: the capacity win of
+    # compressed-resident KV must reach the admission engine, not stay a
+    # codec-side ratio)
     max_decode_slots: int = 64
     prefill_time_per_token: float = 2e-6     # model-dependent sim constant
     decode_time_per_step: float = 2e-3
@@ -193,6 +197,39 @@ class SchedulerConfig:
     # to the policy's ``sheds`` default ('edf-shed' sheds, others don't);
     # True/False forces it either way
     shed_infeasible: Optional[bool] = None
+    # --- HBM-derived decode capacity (ISSUE 8) ---
+    # per-decode-worker HBM budget reserved for resident KV.  None keeps the
+    # flat ``max_decode_slots``; set, the global slot budget becomes
+    # floor(hbm / (resident_bytes_per_token * slot_tokens)) per worker,
+    # summed over the fleet — so a compressed-resident deployment's measured
+    # footprint ratio (KVPool.resident_ratio) translates directly into more
+    # admitted sequences at the same HBM
+    hbm_bytes_per_worker: Optional[int] = None
+    # measured resident KV footprint per token per sequence: for
+    # resident='compressed' use the pool's accounting
+    # (KVPool.hbm_bytes / tokens, or bytes_per_token_resident); for
+    # resident='raw' the raw cache bytes-per-token.  Required (and > 0)
+    # whenever hbm_bytes_per_worker is set.
+    resident_bytes_per_token: Optional[float] = None
+    # per-slot KV reservation: the max context a resident sequence may grow
+    # to while holding its slot
+    slot_tokens: int = 4096
+
+    def derived_decode_slots(self) -> int:
+        """The effective global decode-slot budget: ``max_decode_slots``
+        verbatim, or — when an HBM budget is configured — the number of
+        ``slot_tokens``-context sequences whose resident KV fits it."""
+        if self.hbm_bytes_per_worker is None:
+            return self.max_decode_slots
+        bpt = self.resident_bytes_per_token
+        if bpt is None or bpt <= 0:
+            raise ValueError(
+                "hbm_bytes_per_worker needs resident_bytes_per_token > 0 "
+                "(measure it: KVPool.hbm_bytes()/tokens for "
+                "resident='compressed', raw cache bytes/token otherwise)")
+        per_slot = bpt * max(1, self.slot_tokens)
+        per_worker = int(self.hbm_bytes_per_worker // per_slot)
+        return max(1, per_worker) * max(1, self.n_decode_workers)
 
 
 # same-timestamp event ordering: complete work before starting new work
@@ -211,6 +248,9 @@ class DisaggregatedScheduler:
                 "SchedulerConfig.plan needs kv_bytes_per_token > 0 to scale "
                 "the plan's bytes to each request's prompt length")
         self.cfg = cfg
+        # resolved once: flat max_decode_slots, or the HBM-derived capacity
+        # when the config carries a per-worker HBM budget (ISSUE 8)
+        self.max_decode_slots = cfg.derived_decode_slots()
         self.policy: LinkPolicy = get_policy(cfg.policy)
         self.faults: Optional[FaultPlan] = resolve_faults(cfg.faults)
         # (sort-key, rid, Request) heaps: deterministic under any submission
@@ -389,13 +429,13 @@ class DisaggregatedScheduler:
 
     def _slots_per_worker(self) -> int:
         n = max(1, self.cfg.n_decode_workers)
-        return -(-self.cfg.max_decode_slots // n)
+        return -(-self.max_decode_slots // n)
 
     def _pick_worker(self) -> Optional[int]:
         """Least-loaded ALIVE decode worker with a free slot (ties break to
         the lowest id), respecting the global ``max_decode_slots`` budget.
         None when no worker can take a request right now."""
-        if len(self.decoding) >= self.cfg.max_decode_slots:
+        if len(self.decoding) >= self.max_decode_slots:
             return None
         per = self._slots_per_worker()
         loads = {w.worker_id: 0 for w in self.detector.workers.values()

@@ -332,6 +332,35 @@ class TransferSession:
         self.send(cache, check=check)
         return self.recv(select_dst=select_dst)
 
+    def transfer_compressed(self, cache, check: bool = True,
+                            verify: Optional[bool] = None):
+        """Tensor-path transfer that STOPS at the compressed streams.
+
+        Resident-KV admission consumes the received ``CompressedTensor``s
+        directly (``models/kvpool.KVPool.admit_from_wire``) — the decode
+        worker never rehydrates the stream it is about to keep compressed.
+        Returns ``(comp, raw)`` in the ``encode_leaves`` key convention;
+        leaves that fell back to raw (escape overflow, un-routed dtypes)
+        appear in ``raw`` and make the batch inadmissible for residency.
+
+        Only the local tensor path qualifies: chunked and mesh granularities
+        re-segment leaves, so their wire streams are not page-addressable."""
+        if self.plan.mesh is not None or self.plan.granularity == "chunked":
+            raise ValueError(
+                "transfer_compressed requires the local tensor path "
+                "(mesh=None, n_chunks == 1); use transfer() and raw "
+                "residency for segmented transfers")
+        self._set_verify(verify)
+        self.send(cache, check=check)
+        _, payload = self._staged
+        self._staged = None
+        comp, raw, structure, pristine_comp, pristine_raw = payload
+        if self._channel is not None:
+            comp, raw = self._deliver_tensor(comp, raw, structure,
+                                             pristine_comp, pristine_raw)
+        self._account()
+        return comp, raw
+
     def lower_hlo(self, cache) -> str:
         """Post-SPMD HLO of the mesh program on ``cache``: the
         collective-permute operand sizes are the actual wire bytes."""
