@@ -126,7 +126,7 @@ def _paged_gqa_kernel(
     acc_ref, m_ref, l_ref,
     # scratch
     bits_sc, m_sc, l_sc, acc_sc,
-    *, exponents, mbits, bits_width, chunk, cap, tokens_per_page,
+    *, exponents, mbits, bits_width, chunk, cap_k, cap_v, tokens_per_page,
     hkv, head_dim, dv, causal, scale, fmt,
 ):
     b = pl.program_id(0)
@@ -148,12 +148,14 @@ def _paged_gqa_kernel(
     def _():
         k_bits = _decode_page_tile(k_packed, k_sm, k_pos, k_val, k_cnt,
                                    bits_sc, exponents=exponents, mbits=mbits,
-                                   bits_width=bits_width, chunk=chunk, cap=cap)
+                                   bits_width=bits_width, chunk=chunk,
+                                   cap=cap_k)
         k_tile = _bits_to_float(k_bits, fmt).reshape(
             tokens_per_page, hkv, head_dim)
         v_bits = _decode_page_tile(v_packed, v_sm, v_pos, v_val, v_cnt,
                                    bits_sc, exponents=exponents, mbits=mbits,
-                                   bits_width=bits_width, chunk=chunk, cap=cap)
+                                   bits_width=bits_width, chunk=chunk,
+                                   cap=cap_v)
         v_tile = _bits_to_float(v_bits, fmt).reshape(tokens_per_page, hkv, dv)
 
         q = q_ref[0].astype(jnp.float32).reshape(nq, hkv, g, head_dim)
@@ -228,9 +230,12 @@ def paged_gqa_attention(
     n_pages_max = page_table_k.shape[1]
     k_sm, k_packed, k_pos, k_val, k_cnt = k_streams
     v_sm, v_packed, v_pos, v_val, v_cnt = v_streams
-    pc = k_sm.shape[1]
-    cap = k_pos.shape[1]
-    m_per_tok_v = (v_sm.shape[1] * v_sm.shape[2]) // tokens_per_page
+    # K and V have independent page geometry (dv may differ from head_dim):
+    # per-leaf page_chunks and escape caps feed each leaf's BlockSpecs and
+    # the kernel's static escape unroll.
+    pc_k, pc_v = k_sm.shape[1], v_sm.shape[1]
+    cap_k, cap_v = k_pos.shape[1], v_pos.shape[1]
+    m_per_tok_v = (pc_v * v_sm.shape[2]) // tokens_per_page
     dv = m_per_tok_v // hkv
     scale = scale if scale is not None else 1.0 / np.sqrt(hd)
     n_full = cache_len // tokens_per_page
@@ -239,7 +244,7 @@ def paged_gqa_attention(
     kernel = functools.partial(
         _paged_gqa_kernel,
         exponents=tuple(int(e) for e in exponents), mbits=spec["mbits"],
-        bits_width=spec["bits"], chunk=chunk, cap=cap,
+        bits_width=spec["bits"], chunk=chunk, cap_k=cap_k, cap_v=cap_v,
         tokens_per_page=tokens_per_page, hkv=hkv, head_dim=hd, dv=dv,
         causal=causal, scale=float(scale), fmt=fmt,
     )
@@ -248,8 +253,8 @@ def paged_gqa_attention(
         grid=(b, n_pages_max),
         in_specs=[
             pl.BlockSpec((1, nq, h, hd), lambda b_, p_, *s: (b_, 0, 0, 0)),
-            *_stream_specs(pc, chunk, cap, table=0),
-            *_stream_specs(pc, chunk, cap, table=1),
+            *_stream_specs(pc_k, chunk, cap_k, table=0),
+            *_stream_specs(pc_v, chunk, cap_v, table=1),
         ],
         out_specs=[
             pl.BlockSpec((1, nq, h, dv), lambda b_, p_, *s: (b_, 0, 0, 0)),
@@ -257,7 +262,7 @@ def paged_gqa_attention(
             pl.BlockSpec((1, nq, h), lambda b_, p_, *s: (b_, 0, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((pc, chunk), jnp.int32),
+            pltpu.VMEM((max(pc_k, pc_v), chunk), jnp.int32),
             pltpu.VMEM((nq, hkv, h // hkv), jnp.float32),
             pltpu.VMEM((nq, hkv, h // hkv), jnp.float32),
             pltpu.VMEM((nq, hkv, h // hkv, dv), jnp.float32),
@@ -288,7 +293,7 @@ def _paged_mla_kernel(
     r_sm, r_packed, r_pos, r_val, r_cnt,
     acc_ref, m_ref, l_ref,
     bits_sc, m_sc, l_sc, acc_sc,
-    *, exponents, mbits, bits_width, chunk, cap, tokens_per_page,
+    *, exponents, mbits, bits_width, chunk, cap_c, cap_r, tokens_per_page,
     kv_rank, rope_dim, causal, scale, fmt,
 ):
     b = pl.program_id(0)
@@ -309,11 +314,13 @@ def _paged_mla_kernel(
     def _():
         c_bits = _decode_page_tile(c_packed, c_sm, c_pos, c_val, c_cnt,
                                    bits_sc, exponents=exponents, mbits=mbits,
-                                   bits_width=bits_width, chunk=chunk, cap=cap)
+                                   bits_width=bits_width, chunk=chunk,
+                                   cap=cap_c)
         ckv = _bits_to_float(c_bits, fmt).reshape(tokens_per_page, kv_rank)
         r_bits = _decode_page_tile(r_packed, r_sm, r_pos, r_val, r_cnt,
                                    bits_sc, exponents=exponents, mbits=mbits,
-                                   bits_width=bits_width, chunk=chunk, cap=cap)
+                                   bits_width=bits_width, chunk=chunk,
+                                   cap=cap_r)
         krope = _bits_to_float(r_bits, fmt).reshape(tokens_per_page, rope_dim)
 
         ql = ql_ref[0].astype(jnp.float32)                 # (nq, H, r)
@@ -372,15 +379,19 @@ def paged_mla_attention(
     n_pages_max = page_table_ckv.shape[1]
     c_sm = ckv_streams[0]
     r_sm = krope_streams[0]
+    # ckv and krope have independent page geometry (kv_lora_rank vs
+    # qk_rope_head_dim): per-leaf page_chunks AND escape caps — using ckv's
+    # cap for krope would read past the krope escape arrays.
     pc_c, pc_r = c_sm.shape[1], r_sm.shape[1]
-    cap = ckv_streams[2].shape[1]
+    cap_c = ckv_streams[2].shape[1]
+    cap_r = krope_streams[2].shape[1]
     n_full = cache_len // tokens_per_page
     lens = jnp.stack([n_full, cache_len], axis=1).astype(jnp.int32)
 
     kernel = functools.partial(
         _paged_mla_kernel,
         exponents=tuple(int(e) for e in exponents), mbits=spec["mbits"],
-        bits_width=spec["bits"], chunk=chunk, cap=cap,
+        bits_width=spec["bits"], chunk=chunk, cap_c=cap_c, cap_r=cap_r,
         tokens_per_page=tokens_per_page, kv_rank=kv_rank, rope_dim=rope_dim,
         causal=causal, scale=float(scale), fmt=fmt,
     )
@@ -390,8 +401,8 @@ def paged_mla_attention(
         in_specs=[
             pl.BlockSpec((1, nq, h, kv_rank), lambda b_, p_, *s: (b_, 0, 0, 0)),
             pl.BlockSpec((1, nq, h, rope_dim), lambda b_, p_, *s: (b_, 0, 0, 0)),
-            *_stream_specs(pc_c, chunk, cap, table=0),
-            *_stream_specs(pc_r, chunk, cap, table=1),
+            *_stream_specs(pc_c, chunk, cap_c, table=0),
+            *_stream_specs(pc_r, chunk, cap_r, table=1),
         ],
         out_specs=[
             pl.BlockSpec((1, nq, h, kv_rank), lambda b_, p_, *s: (b_, 0, 0, 0)),

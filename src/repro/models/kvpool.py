@@ -499,7 +499,10 @@ class KVPool:
             self.state = state
             return state
         rows_np = np.array(rows)
-        new_leaves = dict(state.leaves)
+        # Phase 1: encode + overflow-check EVERY leaf before touching the
+        # free-list, so a failed flush leaves the pool exactly as it was
+        # (no leaked pages when a later leaf overflows).
+        staged = []
         for lg in g.leaves:
             leaf = state.leaves[lg.key]
             ct = self.backend.encode(
@@ -522,16 +525,33 @@ class KVPool:
                 raise ResidencyError(
                     f"leaf {lg.key!r}: tail recompress escape overflow "
                     f"(max {int(cnts.max())} > cap {lg.escape_cap})")
-            pids = self._alloc(lg.key, len(idx_l))
-            new_leaves[lg.key] = dataclasses.replace(
-                leaf,
-                sign_mantissa=leaf.sign_mantissa.at[pids].set(
-                    sm[idx_l, idx_b]),
-                packed=leaf.packed.at[pids].set(packed[idx_l, idx_b]),
-                esc_pos=leaf.esc_pos.at[pids].set(pos_pg[idx_l, idx_b]),
-                esc_val=leaf.esc_val.at[pids].set(val_pg[idx_l, idx_b]),
-                esc_cnt=leaf.esc_cnt.at[pids, 0].set(cnt_pg[idx_l, idx_b]),
-                page_table=leaf.page_table.at[idx_l, idx_b, idx_p].set(pids))
+            staged.append((lg, sm, packed, pos_pg, val_pg, cnt_pg,
+                           idx_l, idx_b, idx_p))
+        # Phase 2: allocate + scatter; if a later leaf's allocation exhausts
+        # the pool, return the pages already popped for earlier leaves.
+        new_leaves = dict(state.leaves)
+        alloced = []
+        try:
+            for (lg, sm, packed, pos_pg, val_pg, cnt_pg,
+                 idx_l, idx_b, idx_p) in staged:
+                leaf = state.leaves[lg.key]
+                pids = self._alloc(lg.key, len(idx_l))
+                alloced.append((lg.key, pids))
+                new_leaves[lg.key] = dataclasses.replace(
+                    leaf,
+                    sign_mantissa=leaf.sign_mantissa.at[pids].set(
+                        sm[idx_l, idx_b]),
+                    packed=leaf.packed.at[pids].set(packed[idx_l, idx_b]),
+                    esc_pos=leaf.esc_pos.at[pids].set(pos_pg[idx_l, idx_b]),
+                    esc_val=leaf.esc_val.at[pids].set(val_pg[idx_l, idx_b]),
+                    esc_cnt=leaf.esc_cnt.at[pids, 0].set(
+                        cnt_pg[idx_l, idx_b]),
+                    page_table=leaf.page_table.at[idx_l, idx_b, idx_p].set(
+                        pids))
+        except ResidencyError:
+            for key, pids in alloced:
+                self._release(key, pids)
+            raise
         self.state = dataclasses.replace(state, leaves=new_leaves)
         return self.state
 
@@ -557,15 +577,31 @@ class KVPool:
             vals = jax.lax.bitcast_convert_type(u, jnp.dtype(lg.dtype))
             vals = vals.reshape(g.n_layers, g.batch, g.max_pages,
                                 g.tokens_per_page, lg.m)
-            # splice each row's tail page over its first unmapped slot
+            # splice each row's tail page over its first unmapped slot.  A
+            # row at a page boundary (cache_len % Tp == 0) whose just-filled
+            # page cache_len//Tp - 1 is still UNMAPPED (a flush failed before
+            # the page table was written) holds that page's data only in the
+            # tail: splice the FULL tail there, not an empty one at n_full —
+            # otherwise demotion would silently zero tokens_per_page tokens.
             n_full = state.cache_len // g.tokens_per_page    # (B,)
-            p_idx = jnp.arange(g.max_pages)
-            tail_tok = state.cache_len % g.tokens_per_page
+            tail_tok = state.cache_len % g.tokens_per_page   # (B,)
+            L_, B = g.n_layers, g.batch
+            prev = jnp.maximum(n_full - 1, 0)
+            prev_pid = jnp.take_along_axis(
+                leaf.page_table,
+                jnp.broadcast_to(prev[None, :, None], (L_, B, 1)),
+                axis=2)[..., 0]                              # (L, B)
+            pending = ((tail_tok[None, :] == 0) & (n_full[None, :] > 0)
+                       & (prev_pid < 0))                     # (L, B)
+            eff_page = jnp.where(pending, prev[None, :], n_full[None, :])
+            eff_tok = jnp.where(pending, g.tokens_per_page,
+                                tail_tok[None, :])           # (L, B)
             t_idx = jnp.arange(g.tokens_per_page)
-            tail_mask = (t_idx[None, :] < tail_tok[:, None])  # (B, Tp)
-            tail = jnp.where(tail_mask[None, :, :, None], leaf.tail, 0)
-            is_tail_page = (p_idx[None, :] == n_full[:, None])  # (B, P)
-            vals = jnp.where(is_tail_page[None, :, :, None, None],
+            tail_mask = (t_idx[None, None, :] < eff_tok[..., None])
+            tail = jnp.where(tail_mask[..., None], leaf.tail, 0)
+            p_idx = jnp.arange(g.max_pages)
+            is_tail_page = (p_idx[None, None, :] == eff_page[..., None])
+            vals = jnp.where(is_tail_page[..., None, None],
                              tail[:, :, None], vals)
             out[lg.key] = vals.reshape(g.n_layers, g.batch,
                                        g.max_seq, *lg.shape[3:])

@@ -229,7 +229,15 @@ class SchedulerConfig:
                 "resident='compressed', raw cache bytes/token otherwise)")
         per_slot = bpt * max(1, self.slot_tokens)
         per_worker = int(self.hbm_bytes_per_worker // per_slot)
-        return max(1, per_worker) * max(1, self.n_decode_workers)
+        if per_worker < 1:
+            # flooring to 1 here would quietly over-commit the stated HBM
+            # budget; surface the misconfiguration instead
+            raise ValueError(
+                f"hbm_bytes_per_worker={self.hbm_bytes_per_worker} fits no "
+                f"slot_tokens={self.slot_tokens} sequence at "
+                f"resident_bytes_per_token={bpt:g} "
+                f"(one slot needs {per_slot:.0f} bytes)")
+        return per_worker * max(1, self.n_decode_workers)
 
 
 # same-timestamp event ordering: complete work before starting new work

@@ -75,6 +75,39 @@ def _pool_for(cache, cb, page_bytes=2048):
                                 page_bytes=page_bytes)
 
 
+def _append_rows(pool, rs, rng, grown=None, values=None):
+    """Append one token to every (layer, row) tail and advance cache_len.
+
+    ``values`` maps leaf key -> (L, B, m) override of the random draw (used
+    to inject escape-heavy data into one leaf); ``grown`` (dict of f32
+    copies of the original cache) records the appended values for bit-exact
+    comparison after rehydrate."""
+    g = pool.geom
+    tp = g.tokens_per_page
+    lens = np.asarray(rs.cache_len)
+    for lg in g.leaves:
+        key, m = lg.key, lg.m
+        leaf = rs.leaves[key]
+        new = (values or {}).get(key)
+        if new is None:
+            new = jnp.asarray(
+                rng.standard_normal((g.n_layers, g.batch, m)), jnp.bfloat16)
+        t = rs.cache_len % tp
+        tail = leaf.tail
+        for layer in range(g.n_layers):
+            tail = tail.at[layer].set(KVP._append_tail(
+                tail[layer], new[layer][:, None, :], t))
+        rs = dataclasses.replace(rs, leaves={
+            **rs.leaves, key: dataclasses.replace(leaf, tail=tail)})
+        if grown is not None:
+            for row in range(g.batch):
+                grown[key][:, row, lens[row]] = np.asarray(
+                    new[:, row], np.float32).reshape(
+                        g.n_layers, *grown[key].shape[3:])
+    return dataclasses.replace(
+        rs, cache_len=jnp.asarray(lens + 1, jnp.int32))
+
+
 def _assert_cache_equal(a, b, lens=None):
     """Bitwise equality, optionally restricted to each row's valid prefix."""
     for key in a:
@@ -205,6 +238,90 @@ class TestPool:
         crossed = sum((lens[r] // tp) - (start[r] // tp) for r in range(2))
         for key in ("k", "v"):
             assert pool.allocated_pages(key) - before[key] == 2 * crossed
+
+    def test_failed_flush_rehydrates_full_tail_page(self):
+        """A ResidencyError inside flush_full_tails strikes when a row's
+        just-filled logical page is still unmapped and its data lives ONLY
+        in the tail.  Demotion (rehydrate) must splice the FULL tail at that
+        page index — zeroing it would silently lose tokens_per_page tokens
+        of KV (REVIEW: 'bit-exact demotion' violation)."""
+        cache = _dense_cache(L=2, B=2, S=64)
+        cb = _calibrate(cache)
+        pool = _pool_for(cache, cb)
+        tp = pool.geom.tokens_per_page
+        start = np.array([tp - 1, tp // 2])        # row 0 one short of a page
+        comp, _ = _encode(cache, cb)
+        rs = pool.admit_from_wire(comp, jnp.asarray(start, jnp.int32))
+
+        rng = np.random.default_rng(9)
+        grown = {k: np.asarray(v, np.float32).copy()
+                 for k, v in cache.items()}
+        rs = _append_rows(pool, rs, rng, grown)    # row 0's tail is now FULL
+        lens = start + 1
+        assert int(lens[0]) % tp == 0
+
+        def boom(key, n):
+            raise KVP.ResidencyError("injected flush failure")
+
+        orig_alloc, pool._alloc = pool._alloc, boom
+        with pytest.raises(KVP.ResidencyError):
+            pool.flush_full_tails(rs)
+        pool._alloc = orig_alloc
+
+        reh = pool.rehydrate(rs)
+        for key in reh:
+            got = np.asarray(reh[key], np.float32)
+            for row in range(2):
+                np.testing.assert_array_equal(
+                    got[:, row, :lens[row]], grown[key][:, row, :lens[row]],
+                    err_msg=f"{key} row {row}")
+
+    def test_failed_flush_leaves_free_list_intact(self):
+        """A flush that fails partway must not leak free-list pages: escape
+        overflow is checked for ALL leaves before any allocation, and an
+        exhaustion on a later leaf returns the earlier leaves' pages.  The
+        pool stays fully usable afterwards (REVIEW)."""
+        cache = _dense_cache(L=2, B=2, S=64)
+        cb = _calibrate(cache)
+        pool = _pool_for(cache, cb)
+        g = pool.geom
+        tp = g.tokens_per_page
+        start = np.array([tp - 1, tp - 1])
+        comp, _ = _encode(cache, cb)
+        rs = pool.admit_from_wire(comp, jnp.asarray(start, jnp.int32))
+        rng = np.random.default_rng(10)
+        grown = {k: np.asarray(v, np.float32).copy()
+                 for k, v in cache.items()}
+
+        # (a) escape overflow on the LATER leaf ("v"): "k" encodes clean
+        # first but must not have allocated anything when "v" raises
+        hot = jnp.full((g.n_layers, g.batch, g.leaf("v").m), 1e30,
+                       jnp.bfloat16)                # every element escapes
+        bad = _append_rows(pool, rs, rng, values={"v": hot})
+        free_before = {k: pool.free_pages(k) for k in ("k", "v")}
+        with pytest.raises(KVP.ResidencyError, match="escape"):
+            pool.flush_full_tails(bad)
+        assert {k: pool.free_pages(k) for k in ("k", "v")} == free_before
+
+        # (b) pool exhaustion on the later leaf: "k"'s fresh pages must be
+        # returned when "v"'s allocation fails
+        rs = _append_rows(pool, rs, rng, grown)
+        stash, pool._free["v"] = pool._free["v"], []
+        with pytest.raises(KVP.ResidencyError, match="exhausted"):
+            pool.flush_full_tails(rs)
+        assert pool.free_pages("k") == free_before["k"]
+        pool._free["v"] = stash
+
+        # (c) the same flush now succeeds and the pool rehydrates bit-exact
+        rs = pool.flush_full_tails(rs)
+        lens = start + 1
+        reh = pool.rehydrate(rs)
+        for key in reh:
+            got = np.asarray(reh[key], np.float32)
+            for row in range(2):
+                np.testing.assert_array_equal(
+                    got[:, row, :lens[row]], grown[key][:, row, :lens[row]],
+                    err_msg=f"{key} row {row}")
 
     def test_free_rows_returns_pages(self):
         cache = _dense_cache(L=2, B=2, S=64)
@@ -355,6 +472,70 @@ class TestFusedAttention:
         np.testing.assert_allclose(np.asarray(acc), np.stack(accs),
                                    rtol=1e-5, atol=1e-6)
 
+    def test_gqa_kernel_v_geometry_differs(self):
+        """dv != head_dim: V pages carry their OWN page_chunks and escape
+        cap.  The kernel must consume V's geometry for the V streams —
+        reusing K's reads the wrong block shape / past the V escape arrays
+        (REVIEW)."""
+        L, B, S, hkv, hd, dv = 1, 2, 128, 2, 32, 16
+        rng = np.random.default_rng(21)
+        cache = {
+            "k": jnp.asarray(rng.standard_normal((L, B, S, hkv, hd)),
+                             jnp.bfloat16),
+            "v": jnp.asarray(rng.standard_normal((L, B, S, hkv, dv)),
+                             jnp.bfloat16),
+        }
+        cb = _calibrate(cache)
+        pool = _pool_for(cache, cb, page_bytes=8192)
+        g = pool.geom
+        assert g.leaf("k").page_chunks != g.leaf("v").page_chunks
+        assert g.leaf("k").escape_cap != g.leaf("v").escape_cap
+        tp = g.tokens_per_page
+        lens = jnp.asarray([S, S - tp], jnp.int32)
+        comp, _ = _encode(cache, cb)
+        rs = pool.admit_from_wire(comp, lens)
+        _assert_cache_equal(pool.rehydrate(rs), cache, lens)
+
+        H, grp = 2 * hkv, 2
+        q = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.bfloat16)
+        kl, vl = rs.leaves["k"], rs.leaves["v"]
+        acc, m, l = SA.paged_gqa_attention(
+            q, kl.streams(), vl.streams(), kl.page_table[0],
+            vl.page_table[0], rs.cache_len, exponents=g.exponents,
+            chunk=g.chunk, tokens_per_page=tp, hkv=hkv, interpret=True)
+        assert acc.shape == (B, 1, H, dv)
+
+        reh = pool.rehydrate(rs)
+        kf, vf = reh["k"][0], reh["v"][0]
+        scale = 1.0 / np.sqrt(hd)
+        n_full = np.asarray(lens) // tp
+        qr = q.reshape(B, 1, hkv, grp, hd).astype(jnp.float32)
+        for b in range(B):
+            mm = jnp.full((1, hkv, grp), SA.NEG_INF, jnp.float32)
+            ll = jnp.zeros((1, hkv, grp), jnp.float32)
+            aa = jnp.zeros((1, hkv, grp, dv), jnp.float32)
+            for p in range(int(n_full[b])):
+                kt = kf[b, p * tp:(p + 1) * tp].astype(jnp.float32)
+                vt = vf[b, p * tp:(p + 1) * tp].astype(jnp.float32)
+                s = jnp.einsum("qhgd,thd->qhgt", qr[b], kt,
+                               preferred_element_type=jnp.float32) * scale
+                m_new = jnp.maximum(mm, s.max(axis=-1))
+                pexp = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(mm - m_new)
+                ll = ll * corr + pexp.sum(axis=-1)
+                aa = aa * corr[..., None] + jnp.einsum(
+                    "qhgt,thd->qhgd", pexp, vt,
+                    preferred_element_type=jnp.float32)
+                mm = m_new
+            np.testing.assert_array_equal(
+                np.asarray(m[b]), np.asarray(mm.reshape(1, H)))
+            np.testing.assert_allclose(
+                np.asarray(l[b]), np.asarray(ll.reshape(1, H)),
+                rtol=1e-6, atol=1e-6)
+            np.testing.assert_allclose(
+                np.asarray(acc[b]), np.asarray(aa.reshape(1, H, dv)),
+                rtol=1e-5, atol=1e-6)
+
     def test_one_pallas_call_per_layer(self):
         """Resident decode step structure: exactly one ``pallas_call`` in
         the per-layer scan body, and no codec decode primitives."""
@@ -442,6 +623,71 @@ class TestFusedAttentionMLA:
             assert float(np.abs(a - b).max()) < 0.12 * scale, f"step {step}"
             st_res = pool.flush_full_tails(st_res)
 
+    def test_mla_kernel_per_leaf_escape_caps(self):
+        """kv_lora_rank != qk_rope_head_dim gives the two MLA leaves
+        different page_chunks AND escape caps; the kernel must use each
+        leaf's own cap for its escape BlockSpecs/unroll — taking both from
+        ckv reads past the krope escape arrays (REVIEW)."""
+        L, B, S, r, p_dim, H = 1, 2, 128, 128, 32, 4
+        rng = np.random.default_rng(23)
+        cache = {
+            "ckv": jnp.asarray(rng.standard_normal((L, B, S, r)),
+                               jnp.bfloat16),
+            "krope": jnp.asarray(rng.standard_normal((L, B, S, p_dim)),
+                                 jnp.bfloat16),
+        }
+        cb = _calibrate(cache)
+        pool = _pool_for(cache, cb, page_bytes=16384)
+        g = pool.geom
+        assert g.leaf("ckv").page_chunks != g.leaf("krope").page_chunks
+        assert g.leaf("ckv").escape_cap != g.leaf("krope").escape_cap
+        tp = g.tokens_per_page
+        lens = jnp.asarray([S, S - tp], jnp.int32)
+        comp, _ = _encode(cache, cb)
+        rs = pool.admit_from_wire(comp, lens)
+        _assert_cache_equal(pool.rehydrate(rs), cache, lens)
+
+        q_lat = jnp.asarray(rng.standard_normal((B, 1, H, r)), jnp.bfloat16)
+        q_rope = jnp.asarray(rng.standard_normal((B, 1, H, p_dim)),
+                             jnp.bfloat16)
+        scale = 1.0 / np.sqrt(r + p_dim)
+        cl, rl = rs.leaves["ckv"], rs.leaves["krope"]
+        acc, m, l = SA.paged_mla_attention(
+            q_lat, q_rope, cl.streams(), rl.streams(), cl.page_table[0],
+            rl.page_table[0], rs.cache_len, exponents=g.exponents,
+            chunk=g.chunk, tokens_per_page=tp, scale=scale, interpret=True)
+        assert acc.shape == (B, 1, H, r)
+
+        reh = pool.rehydrate(rs)
+        cf, rf = reh["ckv"][0], reh["krope"][0]
+        n_full = np.asarray(lens) // tp
+        qlf = q_lat.astype(jnp.float32)
+        qrf = q_rope.astype(jnp.float32)
+        for b in range(B):
+            mm = jnp.full((1, H), SA.NEG_INF, jnp.float32)
+            ll = jnp.zeros((1, H), jnp.float32)
+            aa = jnp.zeros((1, H, r), jnp.float32)
+            for p in range(int(n_full[b])):
+                ct = cf[b, p * tp:(p + 1) * tp].astype(jnp.float32)
+                rt = rf[b, p * tp:(p + 1) * tp].astype(jnp.float32)
+                s = (jnp.einsum("qhr,tr->qht", qlf[b], ct,
+                                preferred_element_type=jnp.float32)
+                     + jnp.einsum("qhp,tp->qht", qrf[b], rt,
+                                  preferred_element_type=jnp.float32)) * scale
+                m_new = jnp.maximum(mm, s.max(axis=-1))
+                pexp = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(mm - m_new)
+                ll = ll * corr + pexp.sum(axis=-1)
+                aa = aa * corr[..., None] + jnp.einsum(
+                    "qht,tr->qhr", pexp, ct,
+                    preferred_element_type=jnp.float32)
+                mm = m_new
+            np.testing.assert_array_equal(np.asarray(m[b]), np.asarray(mm))
+            np.testing.assert_allclose(np.asarray(l[b]), np.asarray(ll),
+                                       rtol=1e-6, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(acc[b]), np.asarray(aa),
+                                       rtol=1e-5, atol=1e-6)
+
     def test_mla_one_pallas_call_per_layer(self):
         cfg = get_config("minicpm3-4b").reduced()
         params = M.init_params(cfg, jax.random.PRNGKey(1))
@@ -512,6 +758,54 @@ class TestEngineResident:
         np.testing.assert_array_equal(np.asarray(out_res),
                                       np.asarray(out_raw))
 
+    def test_flush_failure_midstream_matches_raw_tokens(self):
+        """A ResidencyError raised by flush_full_tails MID-GENERATION (the
+        just-filled page's data still only in the tail) demotes losslessly:
+        the whole served sequence must match the raw-resident path.  Before
+        the rehydrate fix, demotion at a flush boundary zeroed a full page
+        of KV and decode silently continued on garbage (REVIEW, high)."""
+        from repro.serving import decode as D
+
+        cfg = get_config("smollm-135m").reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(17)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 24)),
+                           jnp.int32)
+        _, st0 = M.prefill(params, {"tokens": toks}, cfg, max_seq=64)
+        cb = _calibrate(st0.cache)
+        pool = _pool_for(st0.cache, cb)
+        tp = pool.geom.tokens_per_page
+        comp, _ = _encode(st0.cache, cb)
+        rs = pool.admit_from_wire(comp, st0.cache_len)
+
+        # fail the FIRST flush that actually has a full unmapped tail page
+        orig = pool.flush_full_tails
+        state = {"failed": False}
+
+        def failing(st):
+            lens_ = np.asarray(st.cache_len)
+            table0 = np.asarray(
+                st.leaves[pool.geom.leaves[0].key].page_table)
+            needs = any(
+                lens_[b] > 0 and lens_[b] % tp == 0
+                and table0[0, b, lens_[b] // tp - 1] < 0
+                for b in range(lens_.shape[0]))
+            if needs and not state["failed"]:
+                state["failed"] = True
+                raise KVP.ResidencyError("injected flush failure")
+            return orig(st)
+
+        pool.flush_full_tails = failing
+        first = jnp.asarray(rng.integers(0, cfg.vocab_size, (2,)),
+                            jnp.int32)
+        n = tp + 4                                 # crosses >=1 boundary
+        toks_res, _, demoted = D.resident_decode_loop(
+            params, first, rs, pool, cfg, n)
+        assert demoted and state["failed"]
+        toks_raw, _ = D.decode_loop(params, first, st0, cfg, n)
+        np.testing.assert_array_equal(np.asarray(toks_res),
+                                      np.asarray(toks_raw))
+
     def test_hbm_derived_decode_slots(self):
         """SchedulerConfig.derived_decode_slots: the compressed-resident
         footprint buys >= 1.25x the slots of raw at the same HBM budget."""
@@ -530,6 +824,12 @@ class TestEngineResident:
         assert SchedulerConfig(max_decode_slots=7).derived_decode_slots() == 7
         with pytest.raises(ValueError):
             SchedulerConfig(hbm_bytes_per_worker=1 << 30).derived_decode_slots()
+        # a budget that fits no slot must raise, not silently floor to 1
+        # per worker (that would over-commit the stated HBM budget)
+        with pytest.raises(ValueError, match="fits no"):
+            SchedulerConfig(hbm_bytes_per_worker=1024,
+                            resident_bytes_per_token=raw_bpt,
+                            slot_tokens=4096).derived_decode_slots()
 
 
 # ---------------------------------------------------------------------------
