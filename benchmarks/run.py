@@ -32,6 +32,9 @@ MODULES = [
     # needs 8 host devices: run as its own process (CI --only xpod_chunked);
     # skips gracefully inside a full in-process sweep
     "xpod_chunked_smoke",
+    # bulk-data plane: checkpoint round-trip + 2-pod ring_reduce
+    # (CI --only bulkplane; the ring leg skips below 2 host devices)
+    "bulkplane_smoke",
 ]
 
 RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results",

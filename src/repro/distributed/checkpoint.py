@@ -1,117 +1,141 @@
-"""Checkpoint save/restore with SplitZip wire compression.
+"""Checkpoint save/restore: a thin wrapper over the bulk-data plane.
 
-Layout: one directory per step, one ``.szc`` blob per pytree leaf (SplitZip
-wire format for bf16 leaves — ~25% smaller, bit-exact — raw npy bytes for
-everything else) plus a JSON manifest with the treedef, shapes, dtypes, a
-payload checksum per leaf, and the data-pipeline cursor.  Atomic via
-write-to-temp + rename.  ``latest_step``/``restore`` implement the
-fault-tolerance resume path; integrity failures fall back to the previous
-checkpoint (tested by corrupting blobs).
+Layout: one directory per step, one ``.szc`` SZ02 wire frame per pytree
+leaf plus the plan-derived JSON manifest — written by the
+:class:`~repro.serving.session.TransferSession` persistent executor
+(``session.save``/``session.load``; normative format in
+docs/wire_format.md §9).  This module only adds the step-directory
+convention and the corruption-fallback policy: integrity failures
+(:class:`~repro.core.wire.WireIntegrityError` after the plan's re-fetch
+budget, truncated directories, structure drift) fall back to the previous
+checkpoint.  Atomicity, Fletcher-32 verification, fault-injection hooks,
+and :class:`~repro.serving.plan.TransferStats` accounting all come from
+the session — there is no codec, wire, or hash code here by design
+(CI-grep-guarded).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import hashlib
-import json
 import os
-import shutil
-import tempfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import wire
 from repro.core.codebook import Codebook
+from repro.core.wire import WireIntegrityError
+from repro.serving.plan import TransferConfig, TransferPlan, TransferStats
+from repro.serving.session import (PERSIST_MANIFEST, TransferIntegrityError,
+                                   TransferSession)
 
 # checkpoint codec codebook: calibrated once on model-weight statistics;
 # weights/optimizer bf16 state shares the activation exponent concentration.
 CKPT_CODEBOOK = Codebook(fmt="bf16", exponents=tuple(range(113, 129)))
 
-MANIFEST = "manifest.json"
-
-
-def _leaf_paths(tree) -> Tuple[list, Any]:
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    out = []
-    for path, leaf in flat:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        out.append((key, leaf))
-    return out, treedef
-
-
-def _checksum(b: bytes) -> str:
-    return hashlib.sha256(b).hexdigest()[:16]
-
-
-def save(directory: str, step: int, tree, extra: Optional[Dict] = None,
-         codebook: Codebook = CKPT_CODEBOOK) -> str:
-    """Atomically write checkpoint for ``step``; returns the final path."""
-    flat, _ = _leaf_paths(tree)
-    final = os.path.join(directory, f"step_{step:010d}")
-    os.makedirs(directory, exist_ok=True)
-    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
-    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
-    try:
-        for i, (key, leaf) in enumerate(flat):
-            arr = np.asarray(leaf)
-            fname = f"leaf_{i:05d}.szc"
-            if arr.dtype == jnp.bfloat16:
-                bits = np.asarray(
-                    jax.lax.bitcast_convert_type(jnp.asarray(leaf), jnp.uint16))
-                payload, stats = wire.encode(bits.ravel(), codebook)
-                enc = "splitzip-bf16"
-                ratio = stats.ratio
-            else:
-                payload = arr.tobytes()
-                enc = "raw"
-                ratio = 1.0
-            with open(os.path.join(tmp, fname), "wb") as f:
-                f.write(payload)
-            manifest["leaves"][key] = {
-                "file": fname, "enc": enc, "shape": list(arr.shape),
-                "dtype": str(leaf.dtype), "checksum": _checksum(payload),
-                "ratio": ratio,
-            }
-        with open(os.path.join(tmp, MANIFEST), "w") as f:
-            json.dump(manifest, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-    except BaseException:
-        shutil.rmtree(tmp, ignore_errors=True)
-        raise
-    return final
+MANIFEST = PERSIST_MANIFEST
 
 
 class CheckpointCorrupt(RuntimeError):
     pass
 
 
-def _load_dir(path: str, tree_like) -> Tuple[Any, Dict]:
-    with open(os.path.join(path, MANIFEST)) as f:
-        manifest = json.load(f)
-    flat, treedef = _leaf_paths(tree_like)
-    leaves = []
-    for key, like in flat:
-        meta = manifest["leaves"].get(key)
-        if meta is None:
-            raise CheckpointCorrupt(f"missing leaf {key}")
-        with open(os.path.join(path, meta["file"]), "rb") as f:
-            payload = f.read()
-        if _checksum(payload) != meta["checksum"]:
-            raise CheckpointCorrupt(f"checksum mismatch for {key}")
-        shape = tuple(meta["shape"])
-        if meta["enc"] == "splitzip-bf16":
-            bits = wire.decode(payload).reshape(shape)
-            arr = jax.lax.bitcast_convert_type(jnp.asarray(bits), jnp.bfloat16)
-        else:
-            arr = jnp.asarray(np.frombuffer(
-                payload, dtype=np.dtype(meta["dtype"])).reshape(shape))
-        leaves.append(arr.astype(like.dtype))
-    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:010d}")
+
+
+class Checkpointer:
+    """Session-backed checkpoint manager.
+
+    One :class:`TransferPlan` per state structure (cached across calls — the
+    plan is a property of the model, not of the step), executed by the
+    persistent executor.  ``faults=`` / ``verify=`` thread straight into the
+    session, so recovery drills run the same re-fetch machinery production
+    would.  ``stats`` aggregates :class:`TransferStats` across every
+    save/restore this manager ran (``refetches`` and ``refetch_wire_bytes``
+    accumulate even for candidate steps that were ultimately abandoned)."""
+
+    def __init__(self, directory: str, *, codebook: Codebook = CKPT_CODEBOOK,
+                 compress_fp32: bool = True, faults=None):
+        self.directory = directory
+        self.tc = TransferConfig(codebook=codebook, backend="wire",
+                                 compress_fp32=compress_fp32)
+        self.faults = faults
+        self._sessions: Dict[Any, TransferSession] = {}
+        self.stats = TransferStats(chunk_wire_bytes=[], chunk_ok=[],
+                                   raw_passthrough_bytes=0.0, n_elements=0)
+
+    def _session(self, tree) -> TransferSession:
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+        key = (treedef, tuple((tuple(x.shape), str(x.dtype)) for x in flat))
+        sess = self._sessions.get(key)
+        if sess is None:
+            plan = TransferPlan.build(tree, self.tc)
+            sess = plan.session(faults=self.faults)
+            self._sessions[key] = sess
+        return sess
+
+    def _merge(self, s: Optional[TransferStats]) -> None:
+        if s is None:
+            return
+        agg = self.stats
+        agg.raw_passthrough_bytes += s.raw_passthrough_bytes
+        agg.fp32_lo_wire_bytes += s.fp32_lo_wire_bytes
+        agg.fp8_wire_bytes += s.fp8_wire_bytes
+        agg.verify_failures += s.verify_failures
+        agg.refetches += s.refetches
+        agg.raw_refetches += s.raw_refetches
+        agg.refetch_wire_bytes += s.refetch_wire_bytes
+        agg.faults_injected += s.faults_injected
+        agg.fault_delay_s += s.fault_delay_s
+        agg.n_elements = s.n_elements
+        agg.leaf_wire_bytes.update(s.leaf_wire_bytes)
+        agg.leaf_ok.update(s.leaf_ok)
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> str:
+        """Atomically write the checkpoint for ``step``; returns its path."""
+        sess = self._session(tree)
+        path = sess.save(_step_dir(self.directory, step), tree,
+                         extra=extra or {})
+        self._merge(sess.last_stats)
+        return path
+
+    def restore(self, tree_like, step: Optional[int] = None
+                ) -> Tuple[Any, Dict, int]:
+        """Load ``step`` (default latest), bit-exactly; on corruption —
+        persistent integrity failure past the session's re-fetch budget,
+        missing files, structure drift — fall back to the previous
+        checkpoint.  Returns ``(tree, extra, step_loaded)``."""
+        steps = steps_available(self.directory)
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        sess = self._session(tree_like)
+        candidates = [s for s in steps if step is None or s == step]
+        for s in reversed(candidates):
+            try:
+                tree, extra = sess.load(_step_dir(self.directory, s))
+                self._merge(sess.last_stats)
+                return tree, extra, s
+            except (WireIntegrityError, TransferIntegrityError, OSError,
+                    KeyError, ValueError):
+                self._merge(sess.last_stats)
+                continue
+        raise CheckpointCorrupt(
+            f"all candidate checkpoints corrupt in {self.directory}")
+
+
+# -- module-level convenience API (one-shot managers) ------------------------
+
+def save(directory: str, step: int, tree, extra: Optional[Dict] = None,
+         codebook: Codebook = CKPT_CODEBOOK) -> str:
+    """Atomically write checkpoint for ``step``; returns the final path."""
+    return Checkpointer(directory, codebook=codebook).save(step, tree, extra)
+
+
+def restore(directory: str, tree_like, step: Optional[int] = None
+            ) -> Tuple[Any, Dict, int]:
+    """Load ``step`` (default latest); on corruption, fall back to the
+    previous checkpoint (fault-tolerance requirement).  Returns
+    (tree, extra, step_loaded)."""
+    return Checkpointer(directory).restore(tree_like, step)
 
 
 def steps_available(directory: str) -> list:
@@ -129,25 +153,6 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore(directory: str, tree_like, step: Optional[int] = None
-            ) -> Tuple[Any, Dict, int]:
-    """Load ``step`` (default latest); on corruption, fall back to the
-    previous checkpoint (fault-tolerance requirement).  Returns
-    (tree, extra, step_loaded)."""
-    steps = steps_available(directory)
-    if not steps:
-        raise FileNotFoundError(f"no checkpoints under {directory}")
-    candidates = [s for s in steps if step is None or s == step]
-    for s in reversed(candidates):
-        path = os.path.join(directory, f"step_{s:010d}")
-        try:
-            tree, extra = _load_dir(path, tree_like)
-            return tree, extra, s
-        except CheckpointCorrupt:
-            continue
-    raise CheckpointCorrupt(f"all candidate checkpoints corrupt in {directory}")
-
-
 def checkpoint_bytes(directory: str, step: int) -> int:
-    path = os.path.join(directory, f"step_{step:010d}")
+    path = _step_dir(directory, step)
     return sum(os.path.getsize(os.path.join(path, f)) for f in os.listdir(path))

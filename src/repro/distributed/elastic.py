@@ -13,9 +13,15 @@ checkpoint-restore resharding (parameters are saved shard-agnostically).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.codebook import DEFAULT_BF16_CODEBOOK, Codebook
+from repro.launch.mesh import make_mesh
+from repro.serving.plan import TransferConfig, TransferPlan, TransferStats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,7 +50,10 @@ def legal_meshes(n_chips: int, cfg: ArchConfig, shape: ShapeConfig,
     for model in _divisors(per_pod):
         data = per_pod // model
         dp = data * (n_pods if multi_pod else 1)
-        if shape.global_batch % dp and shape.global_batch >= dp:
+        # DP divisibility: every replica needs a non-empty, equal batch
+        # slice.  (This must also reject dp > global_batch — those meshes
+        # would give some replicas a zero per-replica batch.)
+        if shape.global_batch % dp != 0:
             continue
         score = 0.0
         # prefer: FFN sharded, vocab sharded, heads sharded, batch not over-split
@@ -53,8 +62,6 @@ def legal_meshes(n_chips: int, cfg: ArchConfig, shape: ShapeConfig,
         if cfg.vocab_size % model == 0:
             score += 1.5
         if cfg.num_heads and cfg.num_heads % model == 0:
-            score += 1.0
-        if shape.global_batch % dp == 0 and shape.global_batch // dp >= 1:
             score += 1.0
         # mild preference for more TP on big models (memory), more DP on small
         big = cfg.param_count() > 8e9
@@ -82,6 +89,40 @@ def replan_after_failure(current: MeshPlan, surviving_chips: int,
             return plans[0]
         usable -= 1
     return None
+
+
+def reshard(state, old_mesh_plan: Optional[MeshPlan],
+            new_mesh_plan: MeshPlan, *, shardings=None,
+            codebook: Codebook = DEFAULT_BF16_CODEBOOK,
+            compress_fp32: bool = True, faults=None, verify: bool = False
+            ) -> Tuple[Any, TransferStats]:
+    """Ship ``state`` from ``old_mesh_plan``'s configuration onto
+    ``new_mesh_plan``'s mesh through the bulk-data plane: one
+    :class:`TransferPlan` over the state pytree, host-staged splitzip
+    streams via the session's tensor executor (bit-exact; fp32 rides the
+    hi/lo split), then ``device_put`` onto the new mesh.  The old mesh may
+    already be gone (that's the point — after a node loss the state is only
+    host-addressable), so the hop never touches old-mesh collectives.
+
+    ``shardings``: optional pytree of :class:`NamedSharding` matching
+    ``state``; defaults to replicated on the new mesh (the training step's
+    own ``ShardingPolicy`` re-shards parameters lazily on first use).
+    ``faults=`` / ``verify=`` thread into the session so recovery drills
+    exercise the wire-integrity re-fetch path.  Returns
+    ``(state_on_new_mesh, TransferStats)``."""
+    if new_mesh_plan.n_devices > jax.device_count():
+        raise ValueError(
+            f"new mesh {new_mesh_plan.shape} needs {new_mesh_plan.n_devices} "
+            f"devices; only {jax.device_count()} visible")
+    tc = TransferConfig(codebook=codebook, backend="wire",
+                        compress_fp32=compress_fp32)
+    sess = TransferPlan.build(state, tc).session(faults=faults, verify=verify)
+    if shardings is None:
+        mesh = make_mesh(new_mesh_plan.shape, new_mesh_plan.axes)
+        repl = NamedSharding(mesh, P())
+        shardings = jax.tree.map(lambda _: repl, state)
+    out = sess.reshard(state, shardings)
+    return out, sess.last_stats
 
 
 @dataclasses.dataclass

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -113,31 +113,71 @@ class RunReport:
     failures_seen: int
     stragglers_mitigated: int
     final_loss: Optional[float] = None
+    # Aggregated TransferStats when save/restore ran through a session-backed
+    # Checkpointer (refetches, verify failures, wire bytes — the recovery
+    # path's delivery is verified AND accounted, not best-effort).
+    transfer_stats: Optional[Any] = None
 
 
 class ResilientTrainer:
     """Checkpoint-restart training driver.
 
     ``step_fn(state, step_idx) -> (state, metrics)`` is the jitted step;
-    ``save_fn(step, state)`` / ``restore_fn() -> (state, step)`` bind to
-    distributed/checkpoint.py; ``fault_source(step) -> Optional[str]`` lets
-    tests inject 'crash' / 'straggler:<id>' events deterministically.
+    ``save_fn(step, state)`` / ``restore_fn() -> (state, step)`` are bare
+    closures, OR pass ``checkpointer=`` (a
+    :class:`repro.distributed.checkpoint.Checkpointer`) and both bind to the
+    bulk-data plane's persistent executor — recovery then inherits verified
+    delivery (Fletcher-32 + re-fetch budget + previous-step fallback) and
+    surfaces the accumulated :class:`TransferStats` on the
+    :class:`RunReport`.  ``fault_source(step) -> Optional[str]`` lets tests
+    inject 'crash' / 'straggler:<id>' events deterministically.
     """
 
-    def __init__(self, step_fn, save_fn, restore_fn, cfg: FaultConfig,
+    def __init__(self, step_fn, save_fn=None, restore_fn=None,
+                 cfg: FaultConfig = FaultConfig(),
                  detector: Optional[FailureDetector] = None,
-                 fault_source: Optional[Callable[[int], Optional[str]]] = None):
+                 fault_source: Optional[Callable[[int], Optional[str]]] = None,
+                 *, checkpointer=None):
+        if checkpointer is not None and (save_fn or restore_fn):
+            raise ValueError("pass save_fn/restore_fn or checkpointer=, "
+                             "not both")
+        if checkpointer is None and (save_fn is None or restore_fn is None):
+            raise ValueError("need save_fn+restore_fn or checkpointer=")
         self.step_fn = step_fn
         self.save_fn = save_fn
         self.restore_fn = restore_fn
+        self.checkpointer = checkpointer
         self.cfg = cfg
         self.detector = detector
         self.fault_source = fault_source or (lambda s: None)
+
+    def _save(self, step: int, state) -> None:
+        if self.checkpointer is not None:
+            self.checkpointer.save(step, state)
+        else:
+            self.save_fn(step, state)
+
+    def _restore(self, state_like, init_state):
+        if self.checkpointer is None:
+            return self.restore_fn()
+        from repro.distributed.checkpoint import CheckpointCorrupt
+        try:
+            tree, _extra, step = self.checkpointer.restore(state_like)
+            return tree, step
+        except FileNotFoundError:
+            # crashed before the first checkpoint: cold restart
+            return init_state, 0
+        except CheckpointCorrupt:
+            # every candidate exhausted its re-fetch budget; the stats
+            # already carry the verify failures — cold restart is the only
+            # semantically safe continuation
+            return init_state, 0
 
     def run(self, state, total_steps: int) -> RunReport:
         restarts = failures = mitigated = 0
         step = 0
         loss = None
+        init_state = state
         while step < total_steps:
             fault = self.fault_source(step)
             if fault == "crash":
@@ -145,7 +185,7 @@ class ResilientTrainer:
                 restarts += 1
                 if restarts > self.cfg.max_restarts:
                     raise RuntimeError("restart budget exhausted")
-                state, step = self.restore_fn()
+                state, step = self._restore(state, init_state)
                 continue
             if fault and fault.startswith("straggler"):
                 # deadline-based mitigation: drop the straggler's microbatch
@@ -156,7 +196,10 @@ class ResilientTrainer:
             loss = float(metrics.get("loss", float("nan"))) if metrics else None
             step += 1
             if step % self.cfg.checkpoint_every == 0 or step == total_steps:
-                self.save_fn(step, state)
+                self._save(step, state)
         return RunReport(steps_completed=step, restarts=restarts,
                          failures_seen=failures, stragglers_mitigated=mitigated,
-                         final_loss=loss)
+                         final_loss=loss,
+                         transfer_stats=(self.checkpointer.stats
+                                         if self.checkpointer is not None
+                                         else None))

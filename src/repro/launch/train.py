@@ -21,6 +21,7 @@ from repro.configs.base import ShapeConfig, get_config
 from repro.distributed import checkpoint as CKPT
 from repro.distributed.sharding import ShardingPolicy
 from repro.launch.mesh import make_mesh
+from repro.training import grad_compress as GC
 from repro.training import optimizer as OPT
 from repro.training import train_step as TS
 from repro.training.data import SyntheticTokenStream
@@ -62,10 +63,15 @@ def main(argv=None):
                                          kv_block=min(args.seq, 1024)))
     data = SyntheticTokenStream(cfg, shape)
 
+    # one Checkpointer for the whole run: the TransferPlan (and its session)
+    # is built once per state structure, and every save/restore accumulates
+    # into one TransferStats surface
+    ckpt = CKPT.Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+
     start_step = 0
     state = TS.init_state(cfg, jax.random.PRNGKey(0))
-    if args.resume and args.ckpt_dir and CKPT.latest_step(args.ckpt_dir) is not None:
-        state, extra, start_step = CKPT.restore(args.ckpt_dir, state)
+    if args.resume and ckpt and CKPT.latest_step(args.ckpt_dir) is not None:
+        state, extra, start_step = ckpt.restore(state)
         print(f"resumed from step {start_step}")
 
     t0 = time.time()
@@ -77,13 +83,20 @@ def main(argv=None):
                   f"ce {float(metrics['ce']):.4f}  "
                   f"gnorm {float(metrics['grad_norm']):.3f}  "
                   f"lr {float(metrics['lr']):.2e}", flush=True)
-        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-            path = CKPT.save(args.ckpt_dir, step + 1, state,
-                             extra={"arch": cfg.name})
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            path = ckpt.save(step + 1, state, extra={"arch": cfg.name})
             print(f"checkpointed -> {path}")
     dt = time.time() - t0
     tok = (args.steps - start_step) * args.batch * args.seq
     print(f"done: {args.steps - start_step} steps, {tok / max(dt, 1e-9):.0f} tok/s")
+    if ckpt is not None:
+        s = ckpt.stats
+        print(f"checkpoint plane: {s.wire_bytes:.0f} wire bytes  "
+              f"refetches {s.refetches}  verify_failures {s.verify_failures}")
+    if args.grad_compress and GC.last_stats is not None:
+        g = GC.last_stats
+        print(f"gradient plane (per step): {g.wire_bytes:.0f} wire bytes  "
+              f"raw ring fallbacks {g.raw_refetches}")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,19 @@
-"""TransferPlan: compile-once / run-many policy resolution for KV transfer.
+"""TransferPlan: compile-once / run-many policy resolution for bulk transfer.
 
 The PD transfer path used to re-decide per-leaf policy (bf16 vs fp32 vs fp8,
 chunking, escape capacity, local vs mesh execution) on every call, in three
 divergent entry points.  A :class:`TransferPlan` resolves all of it ONCE per
-model from the cache *structure* (shapes + dtypes — abstract values work),
-and a :class:`~repro.serving.session.TransferSession` then executes the plan
-many times.  KVServe-style service-aware connectors and ZipServ-style
+model from the *structure* (shapes + dtypes — abstract values work), and a
+:class:`~repro.serving.session.TransferSession` then executes the plan many
+times.  KVServe-style service-aware connectors and ZipServ-style
 hardware-aware dispatch both make this argument: policy is a property of the
 model + deployment, not of the individual transfer.
+
+The structure is ANY pytree, not just a KV cache: train states, optimizer
+states, and pod-partial gradient trees build plans the same way, which is
+what lets checkpointing (persistent executor), elastic resharding, and the
+compressed gradient ring (collective executor) all ride the one planned,
+verified, accounted byte-moving core.
 
 Per-leaf routing table (resolved at build time):
 
@@ -73,6 +79,10 @@ class TransferConfig:
     # layout='global' last resort (0 disables retries entirely)
     retry_doublings: int = 2
     retry_global_budget: float = 0.05
+    # route threshold: encoded routes need at least this many elements —
+    # smaller leaves ship raw (codec framing would not pay for itself).
+    # Gradient plans set this to grad_compress.MIN_COMPRESS_ELEMS.
+    min_compress_elems: int = 0
 
     def get_backend(self) -> CodecBackend:
         return get_backend(self.backend)
@@ -236,9 +246,12 @@ class TransferPlan:
               granularity: Optional[str] = None) -> "TransferPlan":
         """Resolve the full per-leaf policy from shapes + dtypes.
 
-        ``cache_structure`` may hold concrete arrays or ShapeDtypeStructs —
-        only ``.shape``/``.dtype`` are read, so plans can be built from
-        abstract states (dry-run) or inside a trace (shapes are static).
+        ``cache_structure`` is ANY pytree — a KV cache, a train/optimizer
+        state, or a pod-partial gradient tree — holding concrete arrays or
+        ShapeDtypeStructs: only ``.shape``/``.dtype`` are read, so plans can
+        be built from abstract states (dry-run) or inside a trace (shapes
+        are static).  Leaves below ``tc.min_compress_elems`` elements route
+        'raw' regardless of dtype.
 
         ``granularity`` forces 'chunked' (segment even when ``n_chunks ==
         1``) or 'tensor'; None picks 'chunked' iff ``tc.n_chunks > 1``."""
@@ -253,6 +266,9 @@ class TransferPlan:
             key = leaf_key(path)
             shape, dtype = tuple(leaf.shape), jnp.dtype(leaf.dtype)
             n = int(np.prod(shape)) if shape else 1
+            if n < tc.min_compress_elems:
+                routes.append(LeafRoute(key, shape, str(dtype), "raw"))
+                continue
             if dtype == jnp.bfloat16 and tc.enabled:
                 route = LeafRoute(key, shape, str(dtype), "splitzip",
                                   cap=_resolve_cap(tc, n))
@@ -358,6 +374,19 @@ class TransferPlan:
             elif r.route == "raw":
                 out += r.raw_bytes
         return stream * scale, fp8 * scale, out * scale
+
+    def collective_wire_bytes(self, ratio: float, n_hops: int,
+                              scale: float = 1.0) -> float:
+        """Analytic wire bytes for a ring collective over this plan: each of
+        the ``n_hops`` hops ships the routed stream at the codec ``ratio``
+        (a calibrated/paper :class:`~repro.core.pipeline.CodecProfile`
+        ratio — NOT a hard-coded guess) plus the incompressible bytes at
+        full cost.  ``scale`` evaluates a per-participant slice of the plan
+        (e.g. ``1/n_pod`` when the plan was built over pod-stacked leaves).
+        The lowered HLO's ppermute operand sizes are the ground truth this
+        estimates (analysis/roofline.py reads those)."""
+        stream, fp8, out = self.byte_split(scale)
+        return ((stream + fp8) / max(ratio, 1e-9) + out) * n_hops
 
     def expected_attempts(self, overflow_p: float) -> Tuple[float, float]:
         """``(expected encode attempts per unit, raw-fallback fraction)``

@@ -7,37 +7,56 @@ Since pod-level gradients are bf16, the SplitZip codec applies verbatim —
 it changes no optimization semantics; the only numerics are the same bf16
 adds any all-reduce performs.
 
-Mechanics: the caller produces *pod-partial* gradients with a leading pod dim
-(via vmap over a pod-split batch — see train_step.py).  ``compressed_cross_pod_mean``
-runs a shard_map over the mesh: each pod encodes its partial, a rotating-ring
-exchange moves only the **compressed streams** over the pod axis (n_pod - 1
-hops), each hop decodes + accumulates in fp32.  The ppermute operand bytes in
-the lowered HLO shrink by ~1/rho vs a raw DCN all-reduce — this is the number
-the roofline's collective term scores.
-
-Leaves smaller than ``min_compress_elems`` ship raw (codec framing would not
-pay for itself).
+This module is a thin policy layer over the bulk-data plane: the caller
+produces *pod-partial* gradients with a leading pod dim (via vmap over a
+pod-split batch — see train_step.py), a cached
+:class:`~repro.serving.plan.TransferPlan` routes each leaf (bf16 above
+``MIN_COMPRESS_ELEMS`` -> splitzip stream, everything else raw), and the
+:class:`~repro.serving.session.TransferSession` collective executor
+(``session.ring_reduce``) runs the rotating-ring ppermute exchange over the
+compressed streams (n_pod - 1 hops, decode + fp32 accumulate per hop).  The
+ppermute operand bytes in the lowered HLO shrink by ~1/rho vs a raw DCN
+all-reduce — the number the roofline's collective term scores.  No codec or
+wire calls live here (CI-grep-guarded); per-step accounting surfaces as
+:class:`~repro.serving.plan.TransferStats` in ``last_stats``.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.compat import shard_map
-
-from repro.core import codec as C
 # default gradient codebook: bf16 gradients of normalized networks
 # concentrate in small-magnitude exponents — the same sub-bias band as the
 # shared activation fallback.  Refreshed by calibrate_on_grads.
 from repro.core.codebook import (Codebook,
                                  DEFAULT_BF16_CODEBOOK as DEFAULT_GRAD_CODEBOOK)
+from repro.core.profile import resolve_profile
+from repro.serving.plan import TransferConfig, TransferPlan, TransferStats
 
+# Leaves smaller than this ship raw — codec framing would not pay for
+# itself.  Applied per ring participant via TransferConfig.min_compress_elems.
 MIN_COMPRESS_ELEMS = 16384
+
+#: TransferStats of the most recent ``compressed_cross_pod_mean`` exchange
+#: (None until the first multi-pod call; single-pod meshes never hit DCN).
+last_stats: Optional[TransferStats] = None
+
+_SESSIONS: Dict[Tuple, Any] = {}
+
+
+def gradient_transfer_config(codebook: Codebook = DEFAULT_GRAD_CODEBOOK,
+                             compress: bool = True) -> TransferConfig:
+    """Routing policy for gradient pytrees: bf16 leaves at or above
+    ``MIN_COMPRESS_ELEMS`` ride the splitzip stream, small/odd-dtype leaves
+    go raw, and fp32 stays raw (the in-graph ring cannot ship a hi/lo split
+    — and losslessness must not depend on it)."""
+    return TransferConfig(codebook=codebook, enabled=compress,
+                          compress_fp32=False,
+                          min_compress_elems=MIN_COMPRESS_ELEMS)
 
 
 def calibrate_on_grads(grads, k: int = 16) -> Codebook:
@@ -50,23 +69,21 @@ def calibrate_on_grads(grads, k: int = 16) -> Codebook:
     return cbm.calibrate(leaves, k=k)
 
 
-def _ring_exchange_sum(x: jax.Array, codebook: Codebook, n_pod: int,
-                       compress: bool) -> jax.Array:
-    """Inside shard_map: rotate this pod's contribution around the ring,
-    accumulating in fp32.  x: the local pod-partial gradient (bf16)."""
-    perm = [(i, (i + 1) % n_pod) for i in range(n_pod)]
-    acc = x.astype(jnp.float32)
-    rotating = x
-    for _ in range(n_pod - 1):
-        if compress:
-            ct = C.encode(rotating, codebook)
-            moved = jax.tree.map(
-                lambda s: jax.lax.ppermute(s, "pod", perm), ct)
-            rotating = C.decode(moved)
-        else:
-            rotating = jax.lax.ppermute(rotating, "pod", perm)
-        acc = acc + rotating.astype(jnp.float32)
-    return acc
+def _session(grads_stacked, mesh: Mesh, codebook: Codebook, compress: bool):
+    """Session cache: the plan is a property of (structure, mesh, policy),
+    not of the step — the compiled ring fns inside the session amortize
+    across the whole training run."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads_stacked)
+    key = (treedef, tuple((tuple(x.shape), str(x.dtype)) for x in leaves),
+           mesh, codebook, compress)
+    sess = _SESSIONS.get(key)
+    if sess is None:
+        plan = TransferPlan.build(
+            grads_stacked, gradient_transfer_config(codebook, compress),
+            mesh=mesh, specs=tuple(P("pod") for _ in leaves))
+        sess = plan.session()
+        _SESSIONS[key] = sess
+    return sess
 
 
 def compressed_cross_pod_mean(grads_stacked, mesh: Mesh,
@@ -76,37 +93,28 @@ def compressed_cross_pod_mean(grads_stacked, mesh: Mesh,
 
     Input leaves are sharded P('pod', *param_spec); output leaves drop the pod
     dim and are replicated across pods (every pod computed the same sum)."""
+    global last_stats
     if "pod" not in mesh.shape:
         # single-pod mesh: nothing to exchange, just average the leading dim
         return jax.tree.map(lambda g: jnp.mean(g.astype(jnp.float32), axis=0)
                             .astype(g.dtype), grads_stacked)
-    n_pod = mesh.shape["pod"]
-
-    leaves = jax.tree.leaves(grads_stacked)
-    treedef = jax.tree_util.tree_structure(grads_stacked)
-
-    in_specs = tuple(P("pod") for _ in leaves)
-    out_specs = tuple(P() for _ in leaves)
-
-    def body(*local_leaves):
-        out = []
-        for lf in local_leaves:
-            x = lf[0]  # local pod slice, leading dim 1
-            do_compress = compress and x.size >= MIN_COMPRESS_ELEMS \
-                and x.dtype == jnp.bfloat16
-            total = _ring_exchange_sum(x.astype(jnp.bfloat16), codebook,
-                                       n_pod, do_compress)
-            out.append((total / n_pod).astype(x.dtype))
-        return tuple(out)
-
-    summed = shard_map(body, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)(*leaves)
-    return jax.tree_util.tree_unflatten(treedef, summed)
+    sess = _session(grads_stacked, mesh, codebook, compress)
+    out = sess.ring_reduce(grads_stacked, axis="pod", mean=True)
+    last_stats = sess.last_stats
+    return out
 
 
-def cross_pod_wire_bytes(grads, ratio: float = 4 / 3, n_pod: int = 2,
-                         compress: bool = True) -> float:
-    """Analytic DCN bytes per step for the ring exchange (for reports)."""
-    total = sum(g.size * 2 for g in jax.tree.leaves(grads))  # bf16 bytes
-    per_hop = total / ratio if compress else total
-    return per_hop * (n_pod - 1)
+def cross_pod_wire_bytes(grads, n_pod: int = 2, compress: bool = True,
+                         profile: str = "paper",
+                         codebook: Codebook = DEFAULT_GRAD_CODEBOOK,
+                         link_bw: float = 1.0) -> float:
+    """Analytic DCN bytes per step for the ring exchange (for reports).
+
+    The byte classes come from the gradient plan's route table and the
+    compression ratio from the resolved codec profile (paper Table 2 or a
+    calibration artifact) — not a hard-coded guess."""
+    plan = TransferPlan.build(grads, gradient_transfer_config(
+        codebook, compress), granularity="tensor")
+    ratio = (resolve_profile(profile, link_bw=link_bw).ratio
+             if compress else 1.0)
+    return plan.collective_wire_bytes(ratio, n_hops=n_pod - 1)
