@@ -58,11 +58,13 @@ from repro.configs.base import get_config
 from repro.models.kvpool import bytes_per_token_resident
 from repro.core.profile import (PAPER_G_ENC, CalibratedProfile,
                                 resolve_calibration)
+from repro.serving.cluster import ClusterConfig, LinkSpec
 from repro.serving.faults import FaultPlan, LinkBrownout, WorkerKill
 from repro.serving.plan import TransferPlan
 from repro.serving.policy import available_policies
 from repro.serving.scheduler import (DisaggregatedScheduler, Request,
                                      SchedulerConfig, summarize)
+from repro.serving.traces import TraceConfig, generate_trace
 
 #: the Fig. 2 operating point: the paper pairs its H200 encoder with a
 #: 25 GB/s (200GbE-class) link, i.e. g_enc/B ≈ 24.5 — that PROPORTION is
@@ -228,6 +230,166 @@ def run_chaos(emit) -> None:
         link_conserved=1))
 
 
+# --- fleet sweep (ISSUE 10) -------------------------------------------------
+
+def _fleet_cluster(prefix_cache: bool) -> ClusterConfig:
+    """The benchmark topology: 2 prefill x 3 decode over two heterogeneous
+    links (a full-rate FIFO link and a half-rate SJF link), transfer-aware
+    routing, and an optionally-enabled per-worker prefix directory."""
+    return ClusterConfig(
+        n_prefill=2, n_decode=3,
+        links=(LinkSpec(policy="fifo"),
+               LinkSpec(policy="sjf", bw_scale=0.5)),
+        router="transfer-aware",
+        prefix_cache_bytes=(64 * (1 << 30)) if prefix_cache else None)
+
+
+def _fleet_sched(profile, dil: float, cluster: ClusterConfig,
+                 faults=None, heartbeat_s: float = 1.0):
+    cfg = get_config("qwen3-32b")
+    return DisaggregatedScheduler(SchedulerConfig(
+        max_prefill_batch=4, arch=cfg,
+        prefill_time_per_token=1e-6 * dil,
+        decode_time_per_step=5e-3 * dil,
+        profile=profile, compress=True,
+        cluster=cluster, faults=faults,
+        heartbeat_timeout_s=heartbeat_s))
+
+
+def _fleet_trace(n: int, dil: float, warm: bool) -> list:
+    """A seeded multi-tenant trace, time-dilated into the sim's regime.
+    ``warm`` turns on shared-prefix sessions (the agentic/multi-turn shape);
+    the cold variant keeps everything else identical."""
+    reqs = generate_trace(TraceConfig(
+        seed=11, n_requests=n, session_p=0.6 if warm else 0.0,
+        prompt_max=2048, max_open_sessions=6))
+    for r in reqs:
+        r.arrival *= dil
+        if r.deadline is not None:
+            r.deadline *= dil
+    return reqs
+
+
+def _fleet_run(n: int, profile, dil: float, *, warm: bool,
+               prefix_cache: bool, faults=None, heartbeat_s: float = 1.0):
+    sched = _fleet_sched(profile, dil, _fleet_cluster(prefix_cache),
+                         faults=faults, heartbeat_s=heartbeat_s)
+    for r in _fleet_trace(n, dil, warm):
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == n, f"{n - len(done)} requests not terminal"
+    _assert_links_conserved(sched, done)
+    return sched, done
+
+
+def _assert_links_conserved(sched, done) -> None:
+    """Per-link conservation: each link's busy counter equals the sum of the
+    disjoint occupancy intervals its transfers actually held."""
+    per = [[] for _ in range(len(sched.link_busy_by_link))]
+    for r in done:
+        for li, iv in zip(r.link_ids, r.link_history):
+            per[li].append(iv)
+    for li, ivals in enumerate(per):
+        ivals.sort()
+        drift = abs(sched.link_busy_by_link[li]
+                    - sum(b - a for a, b in ivals))
+        assert drift < 1e-9, f"link {li} accounting drifted by {drift}"
+        assert all(b <= a + 1e-12
+                   for (_, b), (a, _) in zip(ivals, ivals[1:])), \
+            f"link {li} occupancy intervals overlap"
+
+
+def run_fleet(emit) -> None:
+    """The N x M fleet sweep: warm (shared-prefix) vs cold traces on the
+    heterogeneous two-link topology, self-asserting that prefix-aware delta
+    transfer moves fewer wire bytes on the warm trace."""
+    profile, dil = _profile_and_dilation()
+    n = 24 if SMOKE else 96
+
+    warm_on, done_w = _fleet_run(n, profile, dil, warm=True,
+                                 prefix_cache=True)
+    warm_off, _ = _fleet_run(n, profile, dil, warm=True, prefix_cache=False)
+    cold_on, _ = _fleet_run(n, profile, dil, warm=False, prefix_cache=True)
+
+    assert warm_on.prefix_hit_bytes > 0, \
+        "shared-prefix trace produced no prefix hits"
+    assert cold_on.prefix_hit_bytes == 0, \
+        "cold trace must not hit the prefix cache"
+    assert warm_on.transfer_bytes < warm_off.transfer_bytes, \
+        "prefix-delta transfer did not reduce wire bytes on the warm trace"
+    # hits are counted at full raw size, so on + hits == off exactly
+    total_on = warm_on.transfer_bytes + warm_on.prefix_hit_bytes
+    assert abs(total_on - warm_off.transfer_bytes) \
+        <= 1e-6 * warm_off.transfer_bytes, \
+        "prefix accounting does not decompose (shipped + hit != full)"
+
+    out = summarize(done_w)
+    for row, sched in (("fleet/warm", warm_on), ("fleet/warm_nocache",
+                                                 warm_off),
+                       ("fleet/cold", cold_on)):
+        emit("fig2", row, dict(
+            n=n, transfer_gib=round(sched.transfer_bytes / (1 << 30), 4),
+            prefix_hit_gib=round(sched.prefix_hit_bytes / (1 << 30), 4),
+            link0_busy_s=round(sched.link_busy_by_link[0] / dil, 4),
+            link1_busy_s=round(sched.link_busy_by_link[1] / dil, 4)))
+    emit("fig2", "fleet/summary", dict(
+        mean_ttft_ms=round(out["mean_ttft_s"] / dil * 1e3, 3),
+        p99_ttft_ms=round(out["p99_ttft_s"] / dil * 1e3, 3),
+        wire_saved_pct=round(100.0 * warm_on.prefix_hit_bytes
+                             / max(total_on, 1e-12), 2)))
+
+
+def run_fleet_chaos(emit) -> None:
+    """Fleet chaos: a prefill-worker kill, a decode-worker kill, and a
+    brownout pinned to ONE of the two links, over the warm fleet trace.
+    Self-asserting: every request terminal, both failover tiers exercised,
+    per-link conservation, and traffic visibly shifted off the browned link."""
+    profile, dil = _profile_and_dilation()
+    n = 24 if SMOKE else 96
+
+    # fault-free dry run: natural makespan + a decode-residency interval on
+    # worker 0 and the first prefill batch's in-flight window, so every
+    # fault lands where it must at ANY calibration dilation
+    dry, done_dry = _fleet_run(n, profile, dil, warm=True, prefix_cache=True)
+    span = max(r.finish_time for r in done_dry)
+    first_arr = min(r.arrival for r in done_dry)
+    first_pd = min(r.prefill_done for r in done_dry)
+    occ = [(r.admit_time, r.finish_time) for r in done_dry
+           if r.worker == 0 and r.state == "completed"]
+    assert occ, "dry run put no request on decode worker 0"
+    a, b = max(occ, key=lambda ab: ab[1] - ab[0])
+    heartbeat_s = min((b - a), (first_pd - first_arr)) * 0.1
+
+    plan = FaultPlan(
+        seed=13,
+        worker_kills=(
+            WorkerKill(worker=0, at=first_arr + (first_pd - first_arr) * 0.25,
+                       role="prefill"),
+            WorkerKill(worker=0, at=a + (b - a) * 0.25, role="decode")),
+        brownouts=(LinkBrownout(start=0.2 * span, stop=0.7 * span,
+                                factor=0.25, link=1),))
+    sched, done = _fleet_run(n, profile, dil, warm=True, prefix_cache=True,
+                             faults=plan, heartbeat_s=heartbeat_s)
+
+    bad = [r.rid for r in done
+           if r.state not in ("completed", "shed", "failed-over")]
+    assert not bad, f"requests without terminal state: {bad}"
+    assert sched.prefill_failovers > 0, \
+        "prefill-worker kill re-routed nothing"
+    assert sched.failovers > 0, "decode-worker kill caused no failover"
+    assert sched.link_busy_by_link[0] > sched.link_busy_by_link[1], \
+        "brownout on link 1 did not shift traffic to link 0"
+
+    out = summarize(done)
+    emit("fig2", "fleet_chaos", dict(
+        n=n, served=out["n"], n_shed=int(out["n_shed"]),
+        n_failed_over=int(out["n_failed_over"]),
+        prefill_failovers=sched.prefill_failovers,
+        link0_busy_s=round(sched.link_busy_by_link[0] / dil, 4),
+        link1_busy_s=round(sched.link_busy_by_link[1] / dil, 4),
+        links_conserved=1))
+
+
 def run(emit, policy: str | None = None) -> None:
     profile, dil = _profile_and_dilation()
     emit("fig2", "profile", dict(source=profile.source,
@@ -304,13 +466,21 @@ def main(argv=None) -> None:
     ap.add_argument("--chaos", action="store_true",
                     help="run the seeded fault-injection smoke instead of "
                          "the sweeps (asserts shed/failover counters)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the N x M fleet sweep (multi-tenant traces, "
+                         "prefix-aware delta transfer); with --chaos, the "
+                         "fleet fault-injection smoke")
     args = ap.parse_args(argv)
 
     def emit(table: str, row: str, values: dict) -> None:
         kv = ",".join(f"{k}={v}" for k, v in values.items())
         print(f"{table},{row},{kv}", flush=True)
 
-    if args.chaos:
+    if args.fleet and args.chaos:
+        run_fleet_chaos(emit)
+    elif args.fleet:
+        run_fleet(emit)
+    elif args.chaos:
         run_chaos(emit)
     else:
         run(emit, policy=args.policy)

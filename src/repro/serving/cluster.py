@@ -1,0 +1,162 @@
+"""Fleet topology for the disaggregated scheduler (ISSUE 10).
+
+The PR-4/PR-6 event engine modeled ONE prefill worker, ONE link, ONE decode
+worker (the decode side grew into a slot-sharing fleet in PR 6, but the
+prefill and link sides stayed single).  Production is a cluster: N prefill
+workers x M decode workers joined by heterogeneous links, with a router
+placing each request on a (prefill, link, decode) triple.  This module is
+the topology's single source of truth:
+
+* :class:`LinkSpec` — one trunk path between the prefill and decode tiers:
+  its link/admission policy (:mod:`repro.serving.policy` registry key) and a
+  bandwidth scale applied to the scheduler's :class:`CodecProfile` (so a
+  heterogeneous fabric — e.g. one NVLink-class and one Ethernet-class path —
+  is expressed against ONE calibrated profile instead of hard-coded
+  constants, which CI greps ban outside ``repro/core/profile.py``).
+* :class:`ClusterConfig` — the N x M topology plus the router registry key
+  (:mod:`repro.serving.router`) and the per-decode-worker prefix-cache
+  budget that enables prefix-aware delta transfer.
+* :func:`resolve_cluster` — normalizes a ``SchedulerConfig`` into a
+  ``ClusterConfig``.  This function is the ONLY place allowed to read the
+  legacy ``n_decode_workers`` field (CI grep guard): every other module
+  sees worker counts through the resolved cluster, so the topology cannot
+  fork into per-module interpretations.
+* :class:`PrefixDirectory` — the scheduler-side per-decode-worker LRU of
+  resident session prefixes (token counts; the execution-side byte-exact
+  index is :class:`repro.serving.session.PrefixIndex`).
+
+A ``SchedulerConfig`` without an explicit ``cluster`` resolves to the
+degenerate topology (1 prefill x 1 link x however many decode workers the
+legacy field says, router ``'legacy'``) and reproduces the pre-fleet
+scheduler bit-identically — pinned by ``tests/test_fleet.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One prefill->decode trunk path.
+
+    ``policy`` is a link/admission policy registry key
+    (:mod:`repro.serving.policy`); ``bw_scale`` multiplies the scheduler
+    profile's ``link_bw`` for transfers charged on THIS link (1.0 == the
+    calibrated profile verbatim — the scheduler then reuses the profile
+    object, so the degenerate topology's float path is bit-identical)."""
+
+    policy: str = "fifo"
+    bw_scale: float = 1.0
+
+    def __post_init__(self):
+        if not (self.bw_scale > 0.0):
+            raise ValueError("LinkSpec.bw_scale must be > 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """N prefill workers x M decode workers over heterogeneous links.
+
+    ``router`` names the placement policy (:mod:`repro.serving.router`)
+    that assigns each prefilled request a (link, decode-worker) pair;
+    the default ``'transfer-aware'`` minimizes plan-estimated transfer
+    time + current queue depth.  ``prefix_cache_bytes`` is the per-decode-
+    worker budget for resident session prefixes (None disables
+    prefix-aware delta transfer)."""
+
+    n_prefill: int = 1
+    n_decode: int = 1
+    links: Tuple[LinkSpec, ...] = (LinkSpec(),)
+    router: str = "transfer-aware"
+    prefix_cache_bytes: Optional[float] = None
+
+    def __post_init__(self):
+        if self.n_prefill < 1 or self.n_decode < 1:
+            raise ValueError("a cluster needs at least one prefill and one "
+                             "decode worker")
+        if not self.links:
+            raise ValueError("a cluster needs at least one link")
+
+    @property
+    def n_links(self) -> int:
+        return len(self.links)
+
+
+def resolve_cluster(cfg) -> ClusterConfig:
+    """``SchedulerConfig`` -> its resolved :class:`ClusterConfig`.
+
+    An explicit ``cfg.cluster`` wins.  Without one, the legacy single-pipe
+    topology is synthesized: 1 prefill worker, 1 link running
+    ``cfg.policy``, ``cfg.n_decode_workers`` decode workers, and the
+    ``'legacy'`` router (link 0, decode worker chosen at admission time by
+    least-loaded-alive — the exact PR-6 semantics).  This is the only
+    reader of the legacy worker-count field."""
+    cluster = getattr(cfg, "cluster", None)
+    if cluster is not None:
+        return cluster
+    return ClusterConfig(
+        n_prefill=1,
+        n_decode=max(1, cfg.n_decode_workers),
+        links=(LinkSpec(policy=cfg.policy),),
+        router="legacy",
+        prefix_cache_bytes=None)
+
+
+class PrefixDirectory:
+    """Scheduler-side model of each decode worker's resident prefix cache.
+
+    Maps ``(worker, session) -> resident tokens`` with per-worker LRU
+    eviction under ``capacity_bytes`` (None == unbounded).  The scheduler
+    charges a session's next transfer only for the uncached suffix tokens;
+    a worker's death drops its whole directory (the resident KV died with
+    it).  Deterministic: eviction order is insertion/touch order — no
+    clocks, no hashing of unordered containers."""
+
+    def __init__(self, n_workers: int, capacity_bytes: Optional[float] = None):
+        self.capacity_bytes = capacity_bytes
+        self._per_worker: Dict[int, "OrderedDict[int, Tuple[int, float]]"] = {
+            w: OrderedDict() for w in range(n_workers)}
+        self.evictions = 0
+
+    def hit_tokens(self, worker: int, session: int) -> int:
+        """Resident tokens for ``session`` on ``worker`` (0 == cold).
+        Pure lookup — no LRU touch: placement cost probes must not reorder
+        eviction."""
+        d = self._per_worker.get(worker)
+        if d is None or session not in d:
+            return 0
+        return d[session][0]
+
+    def insert(self, worker: int, session: int, tokens: int,
+               bytes_per_token: float) -> None:
+        """Record ``session``'s resident prefix on ``worker`` (touches LRU),
+        then evict least-recently-used sessions past the byte budget."""
+        d = self._per_worker.get(worker)
+        if d is None:
+            return
+        d[session] = (int(tokens), float(tokens) * bytes_per_token)
+        d.move_to_end(session)
+        if self.capacity_bytes is None:
+            return
+        total = sum(b for _, b in d.values())
+        while total > self.capacity_bytes and len(d) > 1:
+            _, (_, freed) = d.popitem(last=False)
+            self.evictions += 1
+            total -= freed
+        if total > self.capacity_bytes and d:
+            # a single resident prefix larger than the whole budget cannot
+            # be cached either — dropping it keeps the model honest
+            d.popitem(last=False)
+            self.evictions += 1
+
+    def drop_worker(self, worker: int) -> None:
+        d = self._per_worker.get(worker)
+        if d is not None:
+            d.clear()
+
+    def resident_bytes(self, worker: int) -> float:
+        d = self._per_worker.get(worker)
+        return sum(b for _, b in d.values()) if d else 0.0

@@ -80,6 +80,12 @@ class EngineStats:
     resident_demotions: int = 0
     resident_hbm_bytes: float = 0.0
     resident_raw_bytes: float = 0.0
+    # failover plane: retained-payload re-sends issued after a decode-worker
+    # death (retain_for_failover=True engines)
+    failover_resends: int = 0
+    # prefix-delta transfer: raw bytes the destination already held and the
+    # wire therefore never carried (excluded from wire_bytes by construction)
+    prefix_hit_bytes: float = 0.0
 
     @property
     def resident_ratio(self) -> float:
@@ -110,7 +116,9 @@ class DisaggregatedEngine:
                  compress_fp32: bool = False,
                  profile: Optional[CodecProfile] = None,
                  verify: bool = False, faults=None,
-                 resident: str = "raw", page_bytes: Optional[int] = None):
+                 resident: str = "raw", page_bytes: Optional[int] = None,
+                 retain_for_failover: bool = False,
+                 prefix_cache_bytes: Optional[float] = None):
         if resident not in ("raw", "compressed"):
             raise ValueError(f"resident={resident!r}: expected 'raw' or "
                              "'compressed'")
@@ -123,6 +131,16 @@ class DisaggregatedEngine:
                                  "(chunked streams are not page-addressable)")
             if not compress:
                 raise ValueError("resident='compressed' requires compress=True")
+        if retain_for_failover and n_chunks != 1:
+            raise ValueError("retain_for_failover requires n_chunks=1 (only "
+                             "tensor-path payloads are retained)")
+        if prefix_cache_bytes is not None:
+            if n_chunks <= 1:
+                raise ValueError("prefix_cache_bytes requires n_chunks > 1 "
+                                 "(delta granularity is the chunked "
+                                 "segmentation)")
+            if not compress:
+                raise ValueError("prefix_cache_bytes requires compress=True")
         self.cfg = cfg
         self.params = params
         self.tc = T.TransferConfig(codebook=codebook, chunk=chunk, cap=cap,
@@ -137,6 +155,8 @@ class DisaggregatedEngine:
         self.faults = faults
         self.resident = resident
         self.page_bytes = page_bytes
+        self.retain_for_failover = retain_for_failover
+        self.prefix_cache_bytes = prefix_cache_bytes
         self.stats = EngineStats()
         self._session: Optional[TransferSession] = None
         self._pool = None   # KVPool of the last admitted batch
@@ -149,7 +169,10 @@ class DisaggregatedEngine:
         validation (the transfer below passes ``check=False``)."""
         if self._session is None or not self._session.plan.matches(cache):
             self._session = TransferPlan.build(cache, self.tc).session(
-                verify=self.verify, faults=self.faults)
+                verify=self.verify, faults=self.faults,
+                retain_last=self.retain_for_failover)
+            if self.prefix_cache_bytes is not None:
+                self._session.enable_prefix_cache(self.prefix_cache_bytes)
         return self._session
 
     @property
@@ -212,7 +235,8 @@ class DisaggregatedEngine:
         self.stats.prefill_calls += 1
         return out
 
-    def transfer(self, state: DecodeState) -> DecodeState:
+    def transfer(self, state: DecodeState,
+                 session_id: Optional[int] = None) -> DecodeState:
         """Compress -> ship -> decompress.  Bit-exact by construction.
 
         Escape-capacity overflow (``ok == False``) walks the plan's geometric
@@ -220,7 +244,12 @@ class DisaggregatedEngine:
         the whole-tensor path, per chunk on the pipelined path — so
         losslessness is unconditional even on adversarial activation
         distributions, and the accounting charges raw bytes for exactly the
-        payload that actually shipped raw."""
+        payload that actually shipped raw.
+
+        ``session_id`` (with ``prefix_cache_bytes`` configured) routes the
+        call through the prefix-delta path: segments the destination already
+        holds for that session never cross the wire, and their raw size lands
+        in ``EngineStats.prefix_hit_bytes``."""
         raw = T.raw_wire_bytes(state.cache)
         self.stats.raw_cache_bytes += raw
         if not self.tc.enabled or not state.cache:
@@ -229,7 +258,27 @@ class DisaggregatedEngine:
         sess = self._session_for(state.cache)
         if self.resident == "compressed":
             return self._transfer_resident(sess, state)
-        cache = sess.transfer(state.cache, check=False)
+        if session_id is not None and self.prefix_cache_bytes is not None:
+            cache = sess.transfer_delta(state.cache, session_id, check=False)
+        else:
+            cache = sess.transfer(state.cache, check=False)
+        self._absorb_transfer_stats(sess.last_stats, state)
+        return DecodeState(cache=cache, cache_len=state.cache_len)
+
+    def resend_cache(self, state: DecodeState) -> DecodeState:
+        """Failover re-send: re-ship the last transfer's retained payload to
+        a replacement decode worker (``retain_for_failover=True`` engines).
+
+        The scheduler's ``on_failover`` hook calls this when a decode worker
+        dies after its transfer completed — the prefill side re-ships the
+        pristine compressed streams (one wire hop, no re-encode) and the
+        rebuilt state is bit-identical to what the dead worker held."""
+        if not self.tc.enabled or not state.cache:
+            return state
+        sess = self._session_for(state.cache)
+        cache = sess.resend_last()
+        self.stats.failover_resends += 1
+        self.stats.raw_cache_bytes += T.raw_wire_bytes(state.cache)
         self._absorb_transfer_stats(sess.last_stats, state)
         return DecodeState(cache=cache, cache_len=state.cache_len)
 
@@ -239,6 +288,7 @@ class DisaggregatedEngine:
         self.stats.chunk_retries += cstats.n_retries
         self.stats.chunk_retry_steps += cstats.n_retry_steps
         self.stats.fp32_lo_wire_bytes += cstats.fp32_lo_wire_bytes
+        self.stats.prefix_hit_bytes += cstats.prefix_hit_bytes
         self.stats.verify_failures += cstats.verify_failures
         self.stats.refetches += cstats.refetches
         self.stats.raw_refetches += cstats.raw_refetches

@@ -84,22 +84,31 @@ def _unit_draw(seed: int, uid: int, chunk: int, attempt: int, salt: int) -> floa
 
 @dataclasses.dataclass(frozen=True)
 class WorkerKill:
-    """Decode worker ``worker`` stops heartbeating at ``at`` (sim seconds);
-    ``revive_at`` restores it (None == permanent death)."""
+    """Worker ``worker`` of tier ``role`` ('decode' or 'prefill') stops
+    heartbeating at ``at`` (sim seconds); ``revive_at`` restores it
+    (None == permanent death)."""
 
     worker: int
     at: float
     revive_at: Optional[float] = None
+    role: str = "decode"
+
+    def __post_init__(self):
+        if self.role not in ("decode", "prefill"):
+            raise ValueError("WorkerKill.role must be 'decode' or 'prefill'")
 
 
 @dataclasses.dataclass(frozen=True)
 class LinkBrownout:
-    """The PD link delivers at ``factor`` (0 < factor <= 1) of its nominal
-    bandwidth over ``[start, stop)`` — congestion, not an outage."""
+    """A PD link delivers at ``factor`` (0 < factor <= 1) of its nominal
+    bandwidth over ``[start, stop)`` — congestion, not an outage.  ``link``
+    selects one link of a multi-link fleet; None degrades every link (the
+    pre-fleet behavior, and what a fabric-wide event looks like)."""
 
     start: float
     stop: float
     factor: float = 0.5
+    link: Optional[int] = None
 
     def __post_init__(self):
         if not (0.0 < self.factor <= 1.0):
@@ -161,33 +170,39 @@ class FaultPlan:
         return None
 
     # -- link faults ---------------------------------------------------------
-    def link_rate(self, t: float) -> float:
-        """Fractional link bandwidth at sim time ``t`` (1.0 == nominal).
-        Overlapping brownouts compound multiplicatively."""
+    def link_rate(self, t: float, link: int = 0) -> float:
+        """Fractional bandwidth of ``link`` at sim time ``t`` (1.0 ==
+        nominal).  Brownouts pinned to another link don't apply; overlapping
+        applicable brownouts compound multiplicatively."""
         rate = 1.0
         for b in self.brownouts:
+            if b.link is not None and b.link != link:
+                continue
             if b.start <= t < b.stop:
                 rate *= b.factor
         return rate
 
-    def link_wall_clock(self, start: float, busy_s: float) -> float:
+    def link_wall_clock(self, start: float, busy_s: float,
+                        link: int = 0) -> float:
         """Wall-clock completion time of a transfer needing ``busy_s``
-        seconds of NOMINAL link time when dispatched at ``start``: integrates
-        the brownout-degraded rate piecewise, so the occupancy interval the
-        scheduler charges is exactly the wall clock the link was held."""
+        seconds of NOMINAL link time when dispatched at ``start`` on
+        ``link``: integrates the brownout-degraded rate piecewise, so the
+        occupancy interval the scheduler charges is exactly the wall clock
+        the link was held."""
         if busy_s <= 0.0:
             return start
         edges = sorted({e for b in self.brownouts
+                        if b.link is None or b.link == link
                         for e in (b.start, b.stop) if e > start})
         t, left = start, busy_s
         for edge in edges:
-            rate = self.link_rate(t)
+            rate = self.link_rate(t, link)
             span = edge - t
             if left <= span * rate:
                 return t + left / rate
             left -= span * rate
             t = edge
-        return t + left / self.link_rate(t)
+        return t + left / self.link_rate(t, link)
 
     def describe(self) -> str:
         parts = []
@@ -198,10 +213,12 @@ class FaultPlan:
             parts.append(f"drop(p={self.drop_p}, chunks={self.drop_chunks})")
         if self.delay_p or self.delay_chunks:
             parts.append(f"delay(p={self.delay_p}, +{self.delay_s}s)")
-        parts.extend(f"kill(w{k.worker}@{k.at}"
+        parts.extend(f"kill({k.role[0]}{k.worker}@{k.at}"
                      + (f", revive@{k.revive_at})" if k.revive_at is not None
                         else ")") for k in self.worker_kills)
-        parts.extend(f"brownout([{b.start},{b.stop}) x{b.factor})"
+        parts.extend(f"brownout("
+                     + (f"link{b.link}, " if b.link is not None else "")
+                     + f"[{b.start},{b.stop}) x{b.factor})"
                      for b in self.brownouts)
         return f"FaultPlan[seed={self.seed}: " + (", ".join(parts) or "none") + "]"
 

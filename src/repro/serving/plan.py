@@ -192,6 +192,12 @@ class TransferStats:
     # wire latency added by 'delay' faults
     faults_injected: int = 0
     fault_delay_s: float = 0.0
+    # prefix-aware delta transfer (ISSUE 10): raw bytes of segments/sidecars
+    # NOT shipped because the receiver's prefix index already held them
+    # bit-identically.  Deliberately excluded from ``wire_bytes`` — that
+    # property stays "bytes actually on the wire", and the saving is the gap
+    # between raw_bytes and it
+    prefix_hit_bytes: float = 0.0
 
     @property
     def wire_bytes(self) -> float:
@@ -513,9 +519,14 @@ class TransferPlan:
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
     # -- session -------------------------------------------------------------
-    def session(self, *, faults=None, verify: bool = False) -> "TransferSession":
+    def session(self, *, faults=None, verify: bool = False,
+                retain_last: bool = False) -> "TransferSession":
         """``faults`` is ``None | registry name | FaultPlan`` (see
         :mod:`repro.serving.faults`); ``verify=True`` checksum-verifies every
-        wire hop and routes failures through the capacity-retry machinery."""
+        wire hop and routes failures through the capacity-retry machinery;
+        ``retain_last=True`` keeps the last transfer's pristine compressed
+        payloads sender-side so a decode-worker failover can re-send them
+        (``TransferSession.resend_last``) without re-encoding."""
         from repro.serving.session import TransferSession
-        return TransferSession(self, faults=faults, verify=verify)
+        return TransferSession(self, faults=faults, verify=verify,
+                               retain_last=retain_last)

@@ -1,0 +1,150 @@
+"""Router registry: place prefilled requests on (link, decode-worker) pairs.
+
+Mirrors the :mod:`repro.serving.policy` link-policy registry: small
+stateless strategy objects behind ``register_router`` / ``get_router`` /
+``available_routers``, cached as singletons.  A router's one job is
+:meth:`Router.place`: given a prefilled request and a read-only *view* of
+the scheduler, pick the link the transfer rides and (optionally) pin the
+decode worker it lands on.
+
+The view duck-types the scheduler and exposes, at minimum:
+
+* ``view.cluster`` — the resolved :class:`~repro.serving.cluster.ClusterConfig`
+* ``view.est_transfer_s(req, link)`` — plan-estimated transfer seconds for
+  this request's uncached suffix on that link (prefix-delta aware)
+* ``view.link_backlog_s(link)`` — queued + in-flight estimated seconds
+* ``view.decode_load(worker)`` — resident + pinned-inbound request count
+* ``view.decode_alive(worker)`` — detector's view of the worker
+* ``view.rr_next(n)`` — scheduler-owned round-robin counter (state lives on
+  the scheduler, NOT the cached router singleton, so separate runs with
+  equal seeds stay deterministic)
+* ``view.cfg`` — the ``SchedulerConfig`` (for ``decode_time_per_step``)
+
+``place`` returns ``(link_id, decode_id)``; ``decode_id == -1`` defers the
+worker choice to admission time (the PR-6 least-loaded-alive path), which
+is exactly what the ``legacy`` router does to keep the degenerate 1x1
+topology bit-identical to the pre-fleet scheduler.
+
+Routers must be deterministic pure functions of the view (no wall clock,
+no RNG, no mutable state on the instance) — the property harness in
+``tests/test_fleet.py`` replays shuffled submissions and requires
+identical placements.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+
+class Router:
+    """Base placement policy; subclasses override :meth:`place`."""
+
+    name = "base"
+
+    def place(self, req, view) -> Tuple[int, int]:
+        raise NotImplementedError
+
+    def _alive_decodes(self, view) -> List[int]:
+        alive = [w for w in range(view.cluster.n_decode)
+                 if view.decode_alive(w)]
+        # with every worker detected-dead, placement still has to put the
+        # request somewhere; revival/failover sorts it out later
+        return alive or list(range(view.cluster.n_decode))
+
+
+_REGISTRY: Dict[str, Callable[[], Router]] = {}
+_INSTANCES: Dict[str, Router] = {}
+
+
+def register_router(name: str, factory: Callable[[], Router]) -> None:
+    _REGISTRY[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def get_router(name: str) -> Router:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown router {name!r}; available: {sorted(_REGISTRY)}")
+    if name not in _INSTANCES:
+        _INSTANCES[name] = _REGISTRY[name]()
+    return _INSTANCES[name]
+
+
+def available_routers() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+class LegacyRouter(Router):
+    """Pre-fleet semantics: everything on link 0, decode worker chosen at
+    admission time (least-loaded-alive).  Computes nothing — the degenerate
+    1-link topology must be bit-identical to the PR-6 scheduler, so this
+    router must not touch any float path."""
+
+    name = "legacy"
+
+    def place(self, req, view) -> Tuple[int, int]:
+        return 0, -1
+
+
+class TransferAwareRouter(Router):
+    """Default fleet router: minimize plan-estimated transfer time plus
+    current queue depth over every (link, decode) pair.
+
+    cost(link, worker) = est_transfer_s(req, link) + link_backlog_s(link)
+                       + decode_load(worker) * decode_time_per_step
+
+    ``est_transfer_s`` is prefix-delta aware (a warm session costs only its
+    uncached suffix on workers holding its prefix), so this router is also
+    what makes prefix affinity fall out for free: the warm worker's transfer
+    term shrinks, pulling the session back to its cache.  Ties break on
+    (cost, link_id, decode_id) — fully deterministic."""
+
+    name = "transfer-aware"
+
+    def place(self, req, view) -> Tuple[int, int]:
+        step = view.cfg.decode_time_per_step
+        best = None
+        for wid in self._alive_decodes(view):
+            decode_cost = view.decode_load(wid) * step
+            for li in range(view.cluster.n_links):
+                cost = (view.est_transfer_s(req, li, wid)
+                        + view.link_backlog_s(li) + decode_cost)
+                key = (cost, li, wid)
+                if best is None or key < best:
+                    best = key
+        return best[1], best[2]
+
+
+class RoundRobinRouter(Router):
+    """Cycle decode workers (skipping detected-dead ones) and links
+    independently.  The counters live on the scheduler (``view.rr_next``)."""
+
+    name = "round-robin"
+
+    def place(self, req, view) -> Tuple[int, int]:
+        alive = self._alive_decodes(view)
+        wid = alive[view.rr_next("decode") % len(alive)]
+        li = view.rr_next("link") % view.cluster.n_links
+        return li, wid
+
+
+class LeastLoadedRouter(Router):
+    """Pin the least-loaded alive decode worker at routing time; take the
+    link with the smallest backlog.  Differs from ``legacy`` in that the
+    choice is made (and pinned) when the transfer is routed, not deferred
+    to admission."""
+
+    name = "least-loaded"
+
+    def place(self, req, view) -> Tuple[int, int]:
+        wid = min(self._alive_decodes(view),
+                  key=lambda w: (view.decode_load(w), w))
+        li = min(range(view.cluster.n_links),
+                 key=lambda l: (view.link_backlog_s(l), l))
+        return li, wid
+
+
+register_router("legacy", LegacyRouter)
+register_router("transfer-aware", TransferAwareRouter)
+register_router("round-robin", RoundRobinRouter)
+register_router("least-loaded", LeastLoadedRouter)

@@ -3,10 +3,10 @@
 Pure-Python admission engine around the jitted prefill/transfer/decode steps:
 requests arrive with a prompt length and a max-new-tokens budget; the
 scheduler assembles prefill batches, serializes the produced caches over the
-PD link, admits transferred requests into decode slots, and retires finished
-requests.  Timing is simulated with the analytic codec/link profile so the
-same scheduler drives both the real CPU execution (tiny configs, tests) and
-the paper-scale what-if sweeps (Fig. 2 analogue).
+PD link fabric, admits transferred requests into decode slots, and retires
+finished requests.  Timing is simulated with the analytic codec/link profile
+so the same scheduler drives both the real CPU execution (tiny configs,
+tests) and the paper-scale what-if sweeps (Fig. 2 analogue).
 
 Transfer time is charged from a real :class:`~repro.serving.plan.TransferPlan`
 — the same object the execution path runs — via ``plan.estimate_time``: the
@@ -21,46 +21,79 @@ already-resolved plan directly.  Expected capacity-schedule retries and raw
 fallbacks (``overflow_p``) inflate the charged encode attempts and ship the
 fallback fraction at full link cost.
 
-The simulation itself is an event queue (prefill-done, transfer-done,
-decode-step) over three resources:
+The simulation is an event queue (prefill-done, transfer-done, decode-step)
+over a CLUSTER of resources (ISSUE 10 — the fleet generalization of the
+original 1x1x1 pipe; :class:`~repro.serving.cluster.ClusterConfig`):
 
-* **prefill worker** — batches up to ``max_prefill_batch`` arrived requests,
-  one batch in flight at a time;
-* **transfer link** — each request occupies the link EXACTLY once
-  (``link_start`` .. ``transfer_done``), regardless of how long it then
-  waits for a decode slot.  WHICH queued request gets the idle link is the
-  pluggable link policy (:mod:`repro.serving.policy` —
-  ``SchedulerConfig.policy``): strict FIFO by prefill completion (default),
-  shortest-transfer-first, SLO/deadline-aware EDF, or FIFO with speculative
-  decode admission.  Every policy preserves the single-occupancy and
-  conservation invariants; only the ordering (and, for ``spec``, the
-  admission overlap) changes.
-* **decode worker** — continuous batching in lockstep steps of
-  ``decode_time_per_step``; transferred requests wait in an explicit
-  admission queue until a slot is free AND join at a step boundary, so TTFT
-  reflects both link and decode-worker occupancy.  Under the ``spec``
-  policy the request holding the link may pre-claim a decode slot left over
-  after the admission queue drains, overlapping its slot wait with its
-  transfer (tokens still never precede ``transfer_done``).
+* **prefill workers** — ``cluster.n_prefill`` workers, each batching up to
+  ``max_prefill_batch`` arrived requests, one batch in flight per worker;
+* **links** — ``cluster.links`` heterogeneous trunk paths, each with its own
+  link policy (:mod:`repro.serving.policy` — fifo / sjf / edf / edf-shed /
+  spec) and a per-link :class:`CodecProfile` derived from the configured
+  profile by the link's ``bw_scale``.  Each request occupies exactly one
+  link per transfer (``link_start`` .. ``transfer_done``); which queued
+  request gets an idle link is that link's policy.  Every policy preserves
+  the single-occupancy and conservation invariants — per link
+  (``link_busy_by_link``) and in total (``link_busy_s``);
+* **decode workers** — ``cluster.n_decode`` workers sharing the global slot
+  budget (ceil-split per worker), continuous batching in lockstep steps of
+  ``decode_time_per_step``.  Transferred requests wait in an explicit
+  admission queue until their worker has a slot AND join at a step
+  boundary, so TTFT reflects link and decode-worker occupancy.  Under a
+  ``spec`` link policy the request holding that link may pre-claim a slot
+  left over after the admission queue drains.
 
-**Failure semantics** (ISSUE 7): the decode side is a FLEET of
-``n_decode_workers`` sharing the slot budget, watched by the same
-:class:`~repro.distributed.fault_tolerance.FailureDetector` the training
-plane uses (driven by the sim clock — live workers heartbeat at every
-event, so deaths surface with real ``heartbeat_timeout_s`` detection
-latency).  A :class:`~repro.serving.faults.FaultPlan`
-(``SchedulerConfig.faults``) injects worker kills and link brownouts:
+**Routing** (ISSUE 10): a :class:`~repro.serving.router.Router` from the
+router registry places each prefilled request on a (link, decode-worker)
+pair; the default ``transfer-aware`` router minimizes plan-estimated
+transfer time + current queue depth over every pair.  A config WITHOUT an
+explicit ``cluster`` resolves (:func:`~repro.serving.cluster.resolve_cluster`)
+to the degenerate 1-prefill/1-link topology under the ``legacy`` router
+(link 0, decode worker deferred to admission-time least-loaded-alive) and
+reproduces the pre-fleet scheduler bit-identically — pinned by
+``tests/test_fleet.py``.
 
-* a dead worker's resident requests **fail over** — the compressed cache is
-  re-sent (a fresh, conserved link occupancy charged via
-  ``plan.estimate_time``) after a capped exponential backoff and re-admitted
-  on a surviving worker, keeping tokens already emitted; each request's
-  ``link_history`` records every occupancy so conservation stays checkable
-  across failures, and exhausted failover budgets shed loudly;
-* a **brownout** stretches in-flight transfers to the piecewise-integrated
-  wall clock of the degraded link rate (occupancy = what the link was held);
-* shedding-enabled policies (``'edf-shed'``, or ``shed_infeasible=True``)
-  drop queued requests that PROVABLY cannot meet their deadline.
+**Prefix-aware delta transfer** (ISSUE 10): with
+``cluster.prefix_cache_bytes`` set, a per-decode-worker
+:class:`~repro.serving.cluster.PrefixDirectory` tracks which session
+prefixes are resident where; a multi-turn request routed back to a worker
+holding its prefix ships only the uncached suffix tokens (charged via the
+same ``plan.estimate_time``, counted in ``prefix_hit_bytes``), and the
+transfer-aware router's cost term shrinks accordingly — prefix affinity
+falls out of the cost model instead of being a special case.  The
+execution-path twin is :class:`repro.serving.session.PrefixIndex` (byte-
+exact segment reuse); this is the capacity/timing model of the same idea.
+
+**Failure semantics** (ISSUE 7, extended to the fleet in ISSUE 10): decode
+AND prefill workers are watched by per-tier
+:class:`~repro.distributed.fault_tolerance.FailureDetector` instances
+driven by the sim clock — live workers heartbeat at every event, so deaths
+surface with real ``heartbeat_timeout_s`` detection latency.  A
+:class:`~repro.serving.faults.FaultPlan` (``SchedulerConfig.faults``)
+injects worker kills (either tier, via ``WorkerKill.role``) and per-link
+brownouts (``LinkBrownout.link``):
+
+* a dead DECODE worker's resident requests **fail over** — the compressed
+  cache is re-sent (a fresh, conserved link occupancy charged via
+  ``plan.estimate_time``) after a capped exponential backoff, re-routed and
+  re-admitted on a surviving worker, keeping tokens already emitted.
+  Requests whose cache had landed on the dead worker but were still
+  awaiting admission fail over the same way; requests merely ROUTED to it
+  whose transfer had not begun are silently re-routed (their cache never
+  left the prefill side).  ``SchedulerConfig.on_failover`` fires per actual
+  re-send so an attached engine can re-send the real cached stream
+  (``DisaggregatedEngine.resend_cache``).  Each request's ``link_history``
+  (+ parallel ``link_ids``) records every occupancy so conservation stays
+  checkable across failures, and exhausted failover budgets shed loudly;
+* a dead PREFILL worker's in-flight batch is cancelled at detection and its
+  requests re-queued (by original arrival order) for a surviving prefill
+  worker — counted in ``prefill_failovers``; tokens are conserved;
+* a **brownout** stretches in-flight transfers on the affected link(s) to
+  the piecewise-integrated wall clock of the degraded rate (occupancy =
+  what the link was held);
+* shedding-enabled link policies (``'edf-shed'``, or
+  ``shed_infeasible=True``) drop queued requests that PROVABLY cannot meet
+  their deadline.
 
 Every request drains terminal in exactly one state — ``'completed'``,
 ``'failed-over'``, or ``'shed'`` — and :func:`summarize` reports the
@@ -79,7 +112,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -89,9 +122,11 @@ from repro.core.codebook import DEFAULT_BF16_CODEBOOK
 from repro.core.pipeline import CodecProfile
 from repro.distributed.fault_tolerance import FailureDetector, FaultConfig
 from repro.models.kvcache import init_cache
+from repro.serving.cluster import ClusterConfig, PrefixDirectory, resolve_cluster
 from repro.serving.faults import FaultPlan, resolve_faults
 from repro.serving.plan import TransferConfig, TransferPlan
 from repro.serving.policy import LinkPolicy, get_policy
+from repro.serving.router import Router, get_router
 
 
 @dataclasses.dataclass
@@ -126,6 +161,17 @@ class Request:
     # disjoint) stays checkable across failures
     link_history: List[Tuple[float, float]] = dataclasses.field(
         default_factory=list)
+    # --- fleet fields (ISSUE 10) ---
+    # multi-turn/agentic traffic: session >= 0 groups turns; prefix_len is
+    # the token prefix already shipped for this session in earlier turns
+    # (the delta-transfer hit candidate); tenant labels the SLO class
+    session: int = -1
+    prefix_len: int = 0
+    tenant: str = ""
+    # decode worker this request was ROUTED to (-1: deferred to admission —
+    # the legacy router); which link carried each link_history interval
+    pinned: int = -1
+    link_ids: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -162,7 +208,9 @@ class SchedulerConfig:
     # real engine's observed retries: DisaggregatedEngine.overflow_priors()
     overflow_priors: Optional[Dict[int, float]] = None
     # link/admission policy registry key (repro.serving.policy):
-    # 'fifo' (default) | 'sjf' | 'edf' | 'spec'
+    # 'fifo' (default) | 'sjf' | 'edf' | 'spec' — used for the single link
+    # of the degenerate topology; an explicit ``cluster`` carries per-link
+    # policies instead
     policy: str = "fifo"
     # default TTFT SLO (seconds after arrival) for deadline-aware policies
     # when a Request carries no explicit deadline
@@ -175,14 +223,16 @@ class SchedulerConfig:
     admit_latency_s: float = 0.0
     # --- failure semantics (ISSUE 7) ---
     # decode workers sharing max_decode_slots (ceil-split per worker); a
-    # worker's death fails its resident requests over to the survivors
+    # worker's death fails its resident requests over to the survivors.
+    # Legacy knob: superseded by ``cluster`` (resolve_cluster is the one
+    # reader); keyword construction stays supported
     n_decode_workers: int = 1
     # injected fault plan: None | registry name | FaultPlan
     # (repro.serving.faults) — worker kills and link brownouts act here;
     # chunk-level faults act in the TransferSession execution path
     faults: Union[None, str, FaultPlan] = None
-    # decode-worker heartbeat lapse after which the FailureDetector declares
-    # the worker dead (failure DETECTION latency: requests on a killed
+    # heartbeat lapse after which the FailureDetector declares a worker
+    # (either tier) dead (failure DETECTION latency: requests on a killed
     # worker keep "decoding" until detection, exactly as deployed)
     heartbeat_timeout_s: float = 0.05
     # capped exponential backoff between a detected failure and the re-fetch
@@ -214,11 +264,22 @@ class SchedulerConfig:
     # per-slot KV reservation: the max context a resident sequence may grow
     # to while holding its slot
     slot_tokens: int = 4096
+    # --- fleet topology (ISSUE 10) ---
+    # explicit N-prefill x M-decode topology over heterogeneous links with a
+    # registry router; None resolves to the degenerate legacy pipe
+    # (repro.serving.cluster.resolve_cluster)
+    cluster: Optional[ClusterConfig] = None
+    # fired once per ACTUAL failover re-send dispatch (budget not exhausted)
+    # with the failing-over Request — the hook an attached engine uses to
+    # re-send the real cached compressed stream (resend_cache), so the
+    # modeled re-fetch charge and the execution-path bytes stay one event
+    on_failover: Optional[Callable[["Request"], None]] = None
 
     def derived_decode_slots(self) -> int:
         """The effective global decode-slot budget: ``max_decode_slots``
         verbatim, or — when an HBM budget is configured — the number of
         ``slot_tokens``-context sequences whose resident KV fits it."""
+        n_decode = resolve_cluster(self).n_decode
         if self.hbm_bytes_per_worker is None:
             return self.max_decode_slots
         bpt = self.resident_bytes_per_token
@@ -237,7 +298,7 @@ class SchedulerConfig:
                 f"slot_tokens={self.slot_tokens} sequence at "
                 f"resident_bytes_per_token={bpt:g} "
                 f"(one slot needs {per_slot:.0f} bytes)")
-        return per_worker * max(1, self.n_decode_workers)
+        return per_worker * n_decode
 
 
 # same-timestamp event ordering: complete work before starting new work
@@ -256,48 +317,87 @@ class DisaggregatedScheduler:
                 "SchedulerConfig.plan needs kv_bytes_per_token > 0 to scale "
                 "the plan's bytes to each request's prompt length")
         self.cfg = cfg
+        self.cluster: ClusterConfig = resolve_cluster(cfg)
         # resolved once: flat max_decode_slots, or the HBM-derived capacity
         # when the config carries a per-worker HBM budget (ISSUE 8)
         self.max_decode_slots = cfg.derived_decode_slots()
-        self.policy: LinkPolicy = get_policy(cfg.policy)
+        self.router: Router = get_router(self.cluster.router)
+        # one link policy per link; ``policy`` stays the link-0 alias for
+        # the degenerate topology's single pipe
+        self.link_policies: List[LinkPolicy] = [
+            get_policy(spec.policy) for spec in self.cluster.links]
+        self.policy: LinkPolicy = self.link_policies[0]
+        # per-link codec/link profiles: the configured profile verbatim when
+        # bw_scale == 1 (same OBJECT — the degenerate topology's float path
+        # is bit-identical), else link_bw rescaled.  Heterogeneity is always
+        # expressed against the one calibrated profile; no constants here.
+        self._profiles: List[Optional[CodecProfile]] = [
+            cfg.profile if (cfg.profile is None or spec.bw_scale == 1.0)
+            else dataclasses.replace(
+                cfg.profile, link_bw=cfg.profile.link_bw * spec.bw_scale)
+            for spec in self.cluster.links]
         self.faults: Optional[FaultPlan] = resolve_faults(cfg.faults)
         # (sort-key, rid, Request) heaps: deterministic under any submission
-        # interleaving — ties always break on rid.  The transfer queue is a
-        # plain list: the link policy picks its minimum-key member at
-        # dispatch time (policy keys end with rid, so picks stay
+        # interleaving — ties always break on rid.  Transfer queues are
+        # plain per-link lists: each link's policy picks its minimum-key
+        # member at dispatch time (policy keys end with rid, so picks stay
         # deterministic too).
         self.pending: List[Tuple[float, int, Request]] = []      # by arrival
-        self.xfer_queue: List[Request] = []                      # policy-ordered
+        self.xfer_queues: List[List[Request]] = [
+            [] for _ in self.cluster.links]                      # policy-ordered
         self.admit_queue: List[Tuple[float, int, Request]] = []  # by transfer_done
         self.decoding: List[Request] = []
         self.done: List[Request] = []
         self.plans: Dict[int, TransferPlan] = {}   # bucket tokens -> plan
         self.link_busy_s = 0.0                     # total charged link time
+        self.link_busy_by_link: List[float] = [0.0] * self.cluster.n_links
         # failure counters (surfaced by summarize via the done list too)
         self.sheds = 0
         self.failovers = 0
         self.retries = 0
+        self.prefill_failovers = 0     # requests re-queued off dead prefill
+        # prefix-aware delta transfer (ISSUE 10): modeled bytes saved/spent
+        self.prefix_hit_bytes = 0.0
+        self.transfer_bytes = 0.0
+        self.prefix_dir: Optional[PrefixDirectory] = (
+            PrefixDirectory(self.cluster.n_decode,
+                            self.cluster.prefix_cache_bytes)
+            if self.cluster.prefix_cache_bytes is not None else None)
         self._events: List[Tuple[float, int, int, tuple]] = []
         self._seq = 0
-        self._prefill_busy = False
-        self._link_busy = False
-        self._link_req: Optional[Request] = None   # in-flight transfer
+        self._prefill_busy: List[bool] = [False] * self.cluster.n_prefill
+        # the batch a prefill worker is computing (re-queued if it dies) and
+        # its epoch (bumped on death: cancels the stale prefill_done event)
+        self._prefill_batch: List[Optional[List[Request]]] = (
+            [None] * self.cluster.n_prefill)
+        self._prefill_epoch: List[int] = [0] * self.cluster.n_prefill
+        self._link_busy: List[bool] = [False] * self.cluster.n_links
+        self._link_req: List[Optional[Request]] = (
+            [None] * self.cluster.n_links)     # in-flight transfer per link
+        self._link_end: List[float] = [0.0] * self.cluster.n_links
         self._step_inflight = False
-        self._dur_cache: Dict[int, float] = {}     # prompt_len -> charge
-        # decode-worker fleet health: the SAME FailureDetector the training
-        # plane uses (distributed/fault_tolerance.py), driven by the sim
+        self._rr: Dict[str, int] = {}              # round-robin router state
+        self._dur_cache: Dict[Tuple[int, int], float] = {}  # (link, tokens)
+        # fleet health: the SAME FailureDetector the training plane uses
+        # (distributed/fault_tolerance.py), one per tier, driven by the sim
         # clock.  Workers heartbeat at every event unless a FaultPlan kill
         # has them down; deaths surface through newly_dead() with real
         # detection latency (heartbeat_timeout_s)
         self._now = 0.0
         self.detector = FailureDetector(
-            max(1, cfg.n_decode_workers),
+            self.cluster.n_decode,
+            FaultConfig(heartbeat_timeout_s=cfg.heartbeat_timeout_s),
+            clock=lambda: self._now)
+        self.prefill_detector = FailureDetector(
+            self.cluster.n_prefill,
             FaultConfig(heartbeat_timeout_s=cfg.heartbeat_timeout_s),
             clock=lambda: self._now)
         if self.faults is not None:
             eps = max(1e-9, cfg.heartbeat_timeout_s * 1e-6)
             for k in self.faults.worker_kills:
-                if k.worker >= max(1, cfg.n_decode_workers):
+                bound = (self.cluster.n_decode if k.role == "decode"
+                         else self.cluster.n_prefill)
+                if k.worker >= bound:
                     continue
                 # wake events guarantee the death is detected (and the
                 # revival observed) even across an otherwise-idle heap
@@ -349,38 +449,113 @@ class DisaggregatedScheduler:
                                                 self.cfg.overflow_p)
         return self.cfg.overflow_p
 
-    def _transfer_duration(self, prompt_len: int) -> float:
-        """One link occupancy, charged via ``plan.estimate_time``: flowshop
+    def _transfer_duration(self, link: int, tokens: int) -> float:
+        """One occupancy of ``link`` shipping ``tokens`` tokens of KV,
+        charged via ``plan.estimate_time`` on the link's profile: flowshop
         over the plan's actual segments (chunked), additive (tensor), native
         link cost (all-raw), with expected capacity-schedule retries under
-        the bucket's overflow prior.  Memoized per prompt length — link
-        policies (e.g. shortest-transfer-first) evaluate it for every queued
-        request at every dispatch."""
-        cached = self._dur_cache.get(prompt_len)
+        the bucket's overflow prior.  ``tokens`` is the DELTA a prefix-aware
+        transfer actually ships (== prompt_len on cold paths).  Memoized per
+        (link, tokens) — link policies (e.g. shortest-transfer-first) and
+        the router evaluate it for every candidate at every dispatch."""
+        cached = self._dur_cache.get((link, tokens))
         if cached is not None:
             return cached
-        p = self.cfg.profile
+        p = self._profiles[link]
         if p is None:
             return 0.0
         if self.cfg.plan is not None:
             plan = self.cfg.plan
             ref = plan.raw_bytes()
-            scale = (float(prompt_len * self.cfg.kv_bytes_per_token) / ref
+            scale = (float(tokens * self.cfg.kv_bytes_per_token) / ref
                      if ref > 0 else 1.0)
         else:
             if self.cfg.arch is None and self.cfg.kv_bytes_per_token <= 0:
                 return 0.0
-            bucket = self._bucket(prompt_len)
+            bucket = self._bucket(tokens)
             plan = self._bucket_plan(bucket)
             if self.cfg.kv_bytes_per_token > 0:
-                scale = (float(prompt_len * self.cfg.kv_bytes_per_token)
+                scale = (float(tokens * self.cfg.kv_bytes_per_token)
                          / plan.raw_bytes())
             else:
-                scale = prompt_len / bucket
+                scale = tokens / bucket
         dur = plan.estimate_time(p, scale=scale,
-                                 overflow_p=self._overflow_prior(prompt_len))
-        self._dur_cache[prompt_len] = dur
+                                 overflow_p=self._overflow_prior(tokens))
+        self._dur_cache[(link, tokens)] = dur
         return dur
+
+    # -- prefix-aware delta transfer (ISSUE 10) ------------------------------
+    def _token_bytes(self, r: Request) -> float:
+        """Modeled raw KV bytes per token for this request — the unit behind
+        the prefix directory's capacity accounting and the hit/transfer byte
+        counters (0.0 when the config carries no byte scale at all)."""
+        if self.cfg.kv_bytes_per_token > 0:
+            return float(self.cfg.kv_bytes_per_token)
+        if self.cfg.arch is not None:
+            bucket = self._bucket(r.prompt_len)
+            return self._bucket_plan(bucket).raw_bytes() / bucket
+        return 0.0
+
+    def _xfer_tokens(self, r: Request, wid: int) -> int:
+        """Tokens this request must actually ship to decode worker ``wid``:
+        the full prompt, minus the session prefix already resident there
+        (never below 1 — a turn always appends fresh tokens).  Cold paths
+        (no directory, no session, no pinned worker) ship everything."""
+        if self.prefix_dir is None or r.session < 0 or wid < 0:
+            return r.prompt_len
+        hit = min(self.prefix_dir.hit_tokens(wid, r.session),
+                  r.prefix_len, r.prompt_len)
+        return max(1, r.prompt_len - hit)
+
+    def _note_resident(self, wid: int, r: Request, tokens: int) -> None:
+        """The session's resident prefix on ``wid`` now spans ``tokens``."""
+        if self.prefix_dir is None or r.session < 0 or wid < 0:
+            return
+        self.prefix_dir.insert(wid, r.session, tokens, self._token_bytes(r))
+
+    # -- router view (duck-typed read surface for Router.place) --------------
+    def est_transfer_s(self, r: Request, link: int, wid: int) -> float:
+        """Plan-estimated seconds to ship this request's uncached suffix to
+        ``wid`` over ``link`` — the router's transfer term."""
+        return self._transfer_duration(link, self._xfer_tokens(r, wid))
+
+    def link_backlog_s(self, link: int) -> float:
+        """Estimated seconds of work ahead of a new arrival on ``link``:
+        the in-flight transfer's remaining wall clock plus every queued
+        request's estimated occupancy."""
+        busy = max(0.0, self._link_end[link] - self._now) \
+            if self._link_busy[link] else 0.0
+        return busy + sum(
+            self._transfer_duration(link, self._xfer_tokens(q, q.pinned))
+            for q in self.xfer_queues[link])
+
+    def decode_load(self, wid: int) -> int:
+        """Resident + inbound (routed-but-not-admitted) requests on ``wid``
+        — the router's queue-depth term."""
+        n = sum(1 for r in self.decoding if r.worker == wid)
+        n += sum(1 for _, _, r in self.admit_queue
+                 if r.pinned == wid and r.worker < 0)
+        for q in self.xfer_queues:
+            n += sum(1 for r in q if r.pinned == wid)
+        n += sum(1 for r in self._link_req
+                 if r is not None and r.pinned == wid and r.worker < 0)
+        return n
+
+    def decode_alive(self, wid: int) -> bool:
+        return self.detector.workers[wid].alive
+
+    def rr_next(self, kind: str) -> int:
+        """Scheduler-owned round-robin counters (router singletons are
+        stateless so equal-seed runs stay deterministic)."""
+        v = self._rr.get(kind, 0)
+        self._rr[kind] = v + 1
+        return v
+
+    def _route(self, t: float, r: Request) -> None:
+        """Place ``r`` on a (link, decode) pair and queue its transfer."""
+        li, wid = self.router.place(r, self)
+        r.pinned = wid
+        self.xfer_queues[li].append(r)
 
     # -- the event loop ------------------------------------------------------
     def _push(self, t: float, prio: int, payload: tuple) -> None:
@@ -397,7 +572,7 @@ class DisaggregatedScheduler:
             t = self._events[0][0]
             self._now = t
             # fleet health first: live workers heartbeat at every event
-            # time, so the detector's view lags reality by at most the
+            # time, so the detectors' view lags reality by at most the
             # heartbeat timeout — real detection latency, simulated
             self._heartbeat_alive(t)
             # complete EVERY event at this timestamp before dispatching new
@@ -407,8 +582,10 @@ class DisaggregatedScheduler:
                 self._handle(t, payload)
             for wid in self.detector.newly_dead():
                 self._on_worker_death(t, wid)
+            for pw in self.prefill_detector.newly_dead():
+                self._on_prefill_death(t, pw)
             self._dispatch(t)
-        stranded = (len(self.pending) + len(self.xfer_queue)
+        stranded = (len(self.pending) + sum(map(len, self.xfer_queues))
                     + len(self.admit_queue) + len(self.decoding))
         if stranded:
             # e.g. max_decode_slots == 0 or every decode worker permanently
@@ -418,26 +595,28 @@ class DisaggregatedScheduler:
             raise RuntimeError(
                 f"{stranded} request(s) never completed (check "
                 "max_decode_slots/max_prefill_batch > 0 and that at least "
-                "one decode worker survives the fault plan)")
+                "one worker per tier survives the fault plan)")
         return self.done
 
-    # -- decode-worker fleet -------------------------------------------------
-    def _worker_down(self, wid: int, t: float) -> bool:
-        """Is worker ``wid`` kill-silenced (not heartbeating) at ``t``?"""
+    # -- worker fleets -------------------------------------------------------
+    def _worker_down(self, wid: int, t: float, role: str = "decode") -> bool:
+        """Is worker ``wid`` of ``role`` kill-silenced (not heartbeating)?"""
         if self.faults is None:
             return False
-        return any(k.worker == wid and k.at <= t
+        return any(k.worker == wid and k.role == role and k.at <= t
                    and (k.revive_at is None or t < k.revive_at)
                    for k in self.faults.worker_kills)
 
     def _heartbeat_alive(self, t: float) -> None:
         for wid in self.detector.workers:
-            if not self._worker_down(wid, t):
+            if not self._worker_down(wid, t, "decode"):
                 self.detector.heartbeat(wid)
+        for pw in self.prefill_detector.workers:
+            if not self._worker_down(pw, t, "prefill"):
+                self.prefill_detector.heartbeat(pw)
 
     def _slots_per_worker(self) -> int:
-        n = max(1, self.cfg.n_decode_workers)
-        return -(-self.max_decode_slots // n)
+        return -(-self.max_decode_slots // self.cluster.n_decode)
 
     def _pick_worker(self) -> Optional[int]:
         """Least-loaded ALIVE decode worker with a free slot (ties break to
@@ -454,15 +633,59 @@ class DisaggregatedScheduler:
         cands = [(load, wid) for wid, load in loads.items() if load < per]
         return min(cands)[1] if cands else None
 
+    def _grant_worker(self, r: Request) -> Optional[int]:
+        """The decode worker ``r`` may occupy right now, or None.  A routed
+        (pinned) request only ever lands on its pinned worker — its cache is
+        being shipped THERE; an unpinned request takes the legacy
+        least-loaded-alive pick."""
+        if r.pinned < 0:
+            return self._pick_worker()
+        if len(self.decoding) >= self.max_decode_slots:
+            return None
+        wid = r.pinned
+        if not self.detector.workers[wid].alive:
+            return None
+        load = sum(1 for q in self.decoding if q.worker == wid)
+        return wid if load < self._slots_per_worker() else None
+
+    def _fail_over(self, t: float, r: Request) -> None:
+        """The decode-side copy of ``r``'s cache is gone (worker death after
+        its transfer completed): charge a failover, and either re-send —
+        capped-backoff refetch, re-routed on wake — or shed when the budget
+        is exhausted.  Fires ``cfg.on_failover`` per actual re-send so an
+        attached engine re-ships the real cached stream."""
+        r.worker = -1
+        r.failovers += 1
+        self.failovers += 1
+        if r.failovers > self.cfg.max_refetches:
+            self._shed(t, r)
+            return
+        backoff = min(self.cfg.retry_backoff_s * 2.0 ** (r.failovers - 1),
+                      self.cfg.retry_backoff_max_s)
+        r.retries += 1
+        self.retries += 1
+        r.admit_time = -1.0
+        r.transfer_done = -1.0
+        r.link_start = -1.0
+        r.pinned = -1
+        if self.cfg.on_failover is not None:
+            self.cfg.on_failover(r)
+        self._push(t + backoff, _PRIO_ARRIVAL, ("refetch", r))
+
     def _on_worker_death(self, t: float, wid: int) -> None:
-        """Decode worker ``wid`` declared dead: its resident decode state is
-        gone.  Requests whose transfer had completed FAIL OVER — their
+        """Decode worker ``wid`` declared dead: its resident decode state
+        and prefix cache are gone.  Requests whose transfer had completed
+        (resident, or still queued for admission) FAIL OVER — their
         compressed cache is re-sent (a fresh link occupancy at the same
         ``plan.estimate_time`` charge) after a capped exponential backoff,
-        then re-admitted on a surviving worker; tokens already emitted are
-        kept (they were already streamed).  Speculative slot-holders merely
-        lose the slot (their cache never landed here).  A request whose
-        failover budget is exhausted is shed — terminal, never silent."""
+        then re-routed to a surviving worker; tokens already emitted are
+        kept (they were already streamed).  Requests merely ROUTED here
+        whose transfer never started are silently re-routed (nothing was
+        lost).  Speculative slot-holders merely lose the slot.  A request
+        whose failover budget is exhausted is shed — terminal, never
+        silent."""
+        if self.prefix_dir is not None:
+            self.prefix_dir.drop_worker(wid)
         for r in list(self.decoding):
             if r.worker != wid:
                 continue
@@ -471,24 +694,48 @@ class DisaggregatedScheduler:
             if r.transfer_done < 0:          # speculative hold: no cache lost
                 r.admit_time = -1.0
                 continue
-            r.failovers += 1
-            self.failovers += 1
-            if r.failovers > self.cfg.max_refetches:
-                self._shed(t, r)
+            self._fail_over(t, r)
+        # cache landed on the dead worker but the slot grant hadn't happened
+        lost = sorted(k for k in self.admit_queue if k[2].pinned == wid)
+        if lost:
+            self.admit_queue = [k for k in self.admit_queue
+                                if k[2].pinned != wid]
+            heapq.heapify(self.admit_queue)
+            for _, _, r in lost:
+                self._fail_over(t, r)
+        # routed here but the transfer never started: the cache is still on
+        # the prefill side — re-route, no failover charged
+        for li in range(self.cluster.n_links):
+            moved = [r for r in self.xfer_queues[li] if r.pinned == wid]
+            if not moved:
                 continue
-            backoff = min(self.cfg.retry_backoff_s * 2.0 ** (r.failovers - 1),
-                          self.cfg.retry_backoff_max_s)
-            r.retries += 1
-            self.retries += 1
-            r.admit_time = -1.0
-            r.transfer_done = -1.0
-            r.link_start = -1.0
-            self._push(t + backoff, _PRIO_ARRIVAL, ("refetch", r))
+            self.xfer_queues[li] = [r for r in self.xfer_queues[li]
+                                    if r.pinned != wid]
+            for r in moved:
+                self._route(t, r)
+        # in-flight transfers TO the dead worker are handled at their
+        # transfer_done (the dead-destination check there)
 
-    def _shed_enabled(self) -> bool:
+    def _on_prefill_death(self, t: float, pw: int) -> None:
+        """Prefill worker ``pw`` declared dead mid-batch: bump its epoch
+        (cancels the pending ``prefill_done`` event) and re-queue the
+        in-flight requests by their original arrival order for a surviving
+        worker.  Nothing downstream existed yet — no link or decode state to
+        clean up, tokens conserved by construction."""
+        self._prefill_epoch[pw] += 1
+        batch = self._prefill_batch[pw]
+        self._prefill_batch[pw] = None
+        self._prefill_busy[pw] = False
+        if not batch:
+            return
+        for r in batch:
+            self.prefill_failovers += 1
+            heapq.heappush(self.pending, (r.arrival, r.rid, r))
+
+    def _shed_enabled(self, link: int) -> bool:
         if self.cfg.shed_infeasible is not None:
             return self.cfg.shed_infeasible
-        return self.policy.sheds
+        return self.link_policies[link].sheds
 
     def _shed(self, t: float, r: Request) -> None:
         r.state = "shed"
@@ -502,16 +749,20 @@ class DisaggregatedScheduler:
         — lands past it.  Only guaranteed losses are shed, so the shed set
         is minimal (any work-conserving policy misses exactly these) and
         the freed link time can only help the survivors."""
-        keep = []
-        for r in self.xfer_queue:
-            dl = self.policy.deadline_of(r, self.cfg)
-            if (dl != math.inf
-                    and t + self._transfer_duration(r.prompt_len)
-                    + self.cfg.decode_time_per_step > dl):
-                self._shed(t, r)
-            else:
-                keep.append(r)
-        self.xfer_queue = keep
+        for li in range(self.cluster.n_links):
+            if not self.xfer_queues[li] or not self._shed_enabled(li):
+                continue
+            keep = []
+            for r in self.xfer_queues[li]:
+                dl = self.link_policies[li].deadline_of(r, self.cfg)
+                if (dl != math.inf
+                        and t + self._transfer_duration(
+                            li, self._xfer_tokens(r, r.pinned))
+                        + self.cfg.decode_time_per_step > dl):
+                    self._shed(t, r)
+                else:
+                    keep.append(r)
+            self.xfer_queues[li] = keep
 
     def _handle(self, t: float, payload: tuple) -> None:
         """Complete one event: move the request to the next queue and free
@@ -522,92 +773,134 @@ class DisaggregatedScheduler:
             r = payload[1]
             heapq.heappush(self.pending, (r.arrival, r.rid, r))
         elif kind == "prefill_done":
-            self._prefill_busy = False
-            for r in payload[1]:
+            batch, pw, epoch = payload[1], payload[2], payload[3]
+            if epoch != self._prefill_epoch[pw]:
+                return   # the worker died mid-batch; requests were re-queued
+            self._prefill_busy[pw] = False
+            self._prefill_batch[pw] = None
+            for r in batch:
                 r.prefill_done = t
-                self.xfer_queue.append(r)
+                self._route(t, r)
         elif kind == "transfer_done":
-            r = payload[1]
+            r, li = payload[1], payload[2]
             r.transfer_done = t
             r.link_history.append((r.link_start, t))
-            self._link_busy = False
-            self._link_req = None
-            if r.admit_time < 0:
+            r.link_ids.append(li)
+            self._link_busy[li] = False
+            self._link_req[li] = None
+            if r.pinned >= 0 and not self.detector.workers[r.pinned].alive:
+                # the cache landed on a worker already declared dead: the
+                # bytes are lost — full failover (re-send on wake)
+                self._fail_over(t, r)
+            elif r.admit_time < 0:
                 # speculatively admitted requests (policy 'spec') already
                 # hold their decode slot; everyone else queues for admission
+                self._note_resident(r.pinned, r, r.prompt_len)
                 heapq.heappush(self.admit_queue, (t, r.rid, r))
+            else:
+                self._note_resident(r.worker, r, r.prompt_len)
         elif kind == "refetch":
-            # failover backoff elapsed: the compressed cache re-enters the
-            # transfer queue and competes under the normal link policy
-            self.xfer_queue.append(payload[1])
+            # failover backoff elapsed: the compressed cache is re-routed
+            # (the old placement may be dead) and re-enters a transfer
+            # queue, competing under that link's normal policy
+            self._route(t, payload[1])
         elif kind == "decode_step":
             self._finish_step(t, payload[1])
         # 'wake': no state change — the event exists to force a scheduler
         # pass (heartbeat sweep + death detection) at a fault-plan instant
 
-    def _next_for_link(self) -> Request:
-        """The link policy's pick: minimum ``link_key`` over the queued
+    def _next_for_link(self, li: int) -> Request:
+        """Link ``li``'s policy pick: minimum ``link_key`` over its queued
         requests (keys end with rid — deterministic under ties)."""
-        r = min(self.xfer_queue,
-                key=lambda q: self.policy.link_key(
-                    q, self._transfer_duration(q.prompt_len), self.cfg))
+        pol = self.link_policies[li]
+        r = min(self.xfer_queues[li],
+                key=lambda q: pol.link_key(
+                    q, self._transfer_duration(
+                        li, self._xfer_tokens(q, q.pinned)), self.cfg))
         # remove by identity, not list.remove: Request is an eq-by-value
         # dataclass, so two field-identical requests would otherwise have one
         # dispatched twice and the other silently dropped
-        for i, q in enumerate(self.xfer_queue):
+        for i, q in enumerate(self.xfer_queues[li]):
             if q is r:
-                del self.xfer_queue[i]
+                del self.xfer_queues[li][i]
                 break
         return r
 
     def _dispatch(self, t: float) -> None:
         """Start whatever each idle resource can pick up at time ``t``.
 
-        This is the policy's dispatch point: the idle link takes the
-        policy-minimal queued request, the decode worker drains the
+        This is the policy's dispatch point: each idle link takes its
+        policy-minimal queued request, the decode fleet drains the
         admission queue into free slots (completed transfers always first),
-        and — only under a speculative policy — the in-flight transfer may
-        claim a slot that is STILL free after that drain."""
-        if not self._prefill_busy and self.pending:
+        and — only under a speculative link policy — that link's in-flight
+        transfer may claim a slot that is STILL free after that drain."""
+        for pw in range(self.cluster.n_prefill):
+            if not self.pending:
+                break
+            if (self._prefill_busy[pw]
+                    or not self.prefill_detector.workers[pw].alive):
+                continue
             batch = []
             while self.pending and len(batch) < self.cfg.max_prefill_batch:
                 batch.append(heapq.heappop(self.pending)[2])
             dur = (max(r.prompt_len for r in batch)
                    * self.cfg.prefill_time_per_token)
-            self._prefill_busy = True
-            self._push(t + dur, _PRIO_PREFILL, ("prefill_done", batch))
-        if self.xfer_queue and self._shed_enabled():
-            self._shed_infeasible(t)
-        if not self._link_busy and self.xfer_queue:
-            r = self._next_for_link()
+            self._prefill_busy[pw] = True
+            self._prefill_batch[pw] = batch
+            self._push(t + dur, _PRIO_PREFILL,
+                       ("prefill_done", batch, pw, self._prefill_epoch[pw]))
+        self._shed_infeasible(t)
+        for li in range(self.cluster.n_links):
+            if self._link_busy[li] or not self.xfer_queues[li]:
+                continue
+            r = self._next_for_link(li)
             r.link_start = t
-            dur = self._transfer_duration(r.prompt_len)
+            tokens = self._xfer_tokens(r, r.pinned)
+            dur = self._transfer_duration(li, tokens)
             end = t + dur
             if self.faults is not None:
                 # link brownout: the same bytes at the degraded piecewise
                 # rate — the link is HELD for the full wall-clock interval,
                 # so occupancy stays conserved (link_busy_s == Σ intervals)
-                end = self.faults.link_wall_clock(t, dur)
+                end = self.faults.link_wall_clock(t, dur, li)
             self.link_busy_s += end - t
-            self._link_busy = True
-            self._link_req = r
-            self._push(end, _PRIO_TRANSFER, ("transfer_done", r))
+            self.link_busy_by_link[li] += end - t
+            bpt = self._token_bytes(r)
+            self.transfer_bytes += tokens * bpt
+            if tokens < r.prompt_len:
+                self.prefix_hit_bytes += (r.prompt_len - tokens) * bpt
+            self._link_busy[li] = True
+            self._link_req[li] = r
+            self._link_end[li] = end
+            self._push(end, _PRIO_TRANSFER, ("transfer_done", r, li))
+        overflow = []    # pinned requests whose worker is momentarily full
         while self.admit_queue:
-            w = self._pick_worker()
+            r = self.admit_queue[0][2]
+            w = self._grant_worker(r)
             if w is None:
-                break
-            r = heapq.heappop(self.admit_queue)[2]
+                if r.pinned < 0:
+                    # unpinned head blocked == every alive worker is at
+                    # capacity (or the global budget is) — strict
+                    # head-of-line, exactly the legacy admission order
+                    break
+                overflow.append(heapq.heappop(self.admit_queue))
+                continue
+            heapq.heappop(self.admit_queue)
             r.admit_time = t
             r.worker = w
             self.decoding.append(r)
-        if (self.policy.speculative and self._link_req is not None
-                and self._link_req.admit_time < 0):
+        for item in overflow:
+            heapq.heappush(self.admit_queue, item)
+        for li in range(self.cluster.n_links):
+            r = self._link_req[li]
+            if (r is None or not self.link_policies[li].speculative
+                    or r.admit_time >= 0):
+                continue
             # speculative admission: the transferring request pre-claims a
             # LEFTOVER slot (never outranks a completed transfer above), so
             # its decode-slot wait overlaps its transfer
-            w = self._pick_worker()
+            w = self._grant_worker(r)
             if w is not None:
-                r = self._link_req
                 r.admit_time = t
                 r.worker = w
                 self.decoding.append(r)
@@ -641,6 +934,10 @@ class DisaggregatedScheduler:
             if r.tokens_out >= r.max_new_tokens:
                 r.finish_time = t
                 r.state = "failed-over" if r.failovers else "completed"
+                # the retiring session's KV (prompt + generation) stays
+                # resident until evicted — the next turn's delta baseline
+                self._note_resident(r.worker, r,
+                                    r.prompt_len + r.tokens_out)
                 self.decoding.remove(r)
                 self.done.append(r)
 

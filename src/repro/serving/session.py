@@ -38,10 +38,12 @@ Five execution paths, selected by the plan and the entry point:
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
 import tempfile
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -237,6 +239,81 @@ def decode_leaves(comp: Dict, raw: Dict, structure, backend: str = "xla"):
 
 
 # ---------------------------------------------------------------------------
+# prefix-delta index (transfer_delta)
+# ---------------------------------------------------------------------------
+
+def _host_bits(x) -> np.ndarray:
+    """Flat byte view of any array-like, on host.  Sender-shadow comparison
+    runs in the BIT domain, not the numeric one — NaN payloads, negative
+    zeros, and denormals all compare exactly."""
+    return np.ascontiguousarray(np.asarray(x)).view(np.uint8).reshape(-1)
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    """One session's resident cache, seen from both ends of the wire:
+    sender-side bit shadows (what to compare the next turn against) and
+    receiver-side objects (what a hit re-uses without any wire traffic)."""
+
+    stream: np.ndarray                   # sender u16 shadow of fold_stream
+    seg_bits: List[jax.Array]            # receiver decoded bits per segment
+    side_shadow: Dict[str, np.ndarray]   # "<fam>:<key>" -> sender host bits
+    side_obj: Dict[str, object]          # "<fam>:<key>" -> receiver object
+    nbytes: float                        # raw-byte footprint (LRU accounting)
+
+
+class PrefixIndex:
+    """LRU-by-bytes map of session id -> :class:`_PrefixEntry`.
+
+    This is the execution-side twin of the scheduler's sim-side
+    ``PrefixDirectory``: where the directory *models* residency in token
+    counts, this index *holds* the actual receiver objects and the sender
+    shadows that :meth:`TransferSession.transfer_delta` compares against.
+    ``capacity_bytes=None`` means unbounded; otherwise least-recently-used
+    sessions are dropped until the raw-byte footprint fits (a single entry
+    larger than the whole budget is dropped immediately — residency must
+    never exceed the stated HBM envelope)."""
+
+    def __init__(self, capacity_bytes: Optional[float] = None):
+        if capacity_bytes is not None and capacity_bytes <= 0:
+            raise ValueError("capacity_bytes must be positive (or None)")
+        self.capacity_bytes = capacity_bytes
+        self.evictions = 0
+        self._entries: "OrderedDict[object, _PrefixEntry]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def sessions(self):
+        return list(self._entries)
+
+    @property
+    def resident_bytes(self) -> float:
+        return sum(e.nbytes for e in self._entries.values())
+
+    def get(self, session_id) -> Optional[_PrefixEntry]:
+        e = self._entries.get(session_id)
+        if e is not None:
+            self._entries.move_to_end(session_id)
+        return e
+
+    def put(self, session_id, entry: _PrefixEntry) -> None:
+        self._entries[session_id] = entry
+        self._entries.move_to_end(session_id)
+        if self.capacity_bytes is None:
+            return
+        while self._entries and self.resident_bytes > self.capacity_bytes:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def drop(self, session_id) -> None:
+        self._entries.pop(session_id, None)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+# ---------------------------------------------------------------------------
 # the session
 # ---------------------------------------------------------------------------
 
@@ -260,9 +337,10 @@ class TransferSession:
     collective with no host frame to checksum."""
 
     def __init__(self, plan: TransferPlan, *, faults=None,
-                 verify: bool = False):
+                 verify: bool = False, retain_last: bool = False):
         self.plan = plan
         self.verify = verify
+        self.retain_last = retain_last
         self.faults = resolve_faults(faults)
         if plan.mesh is not None and (verify or self.faults is not None):
             raise ValueError(
@@ -278,6 +356,11 @@ class TransferSession:
         self._uid = 0         # per-send transfer id (fault-plan keying)
         self._injected_seen = 0
         self._staged = None   # in-flight payload between send() and recv()
+        # failover re-send: the pristine encoded payload of the most recent
+        # tensor-path send, kept only under retain_last (see resend_last)
+        self._retained = None
+        # prefix-delta state: session-id -> _PrefixEntry (see transfer_delta)
+        self._prefix_index: Optional[PrefixIndex] = None
         # executor closures, built on first use: a mesh plan may only ever
         # run the collective executor (ring specs don't fit the send/recv
         # out_specs convention), so neither shard_map is constructed eagerly
@@ -385,6 +468,224 @@ class TransferSession:
                                              pristine_comp, pristine_raw)
         self._account()
         return comp, raw
+
+    def resend_last(self, verify: Optional[bool] = None):
+        """Re-ship the most recent tensor-path transfer from its retained
+        encoded payload — the decode-worker-failover path.
+
+        When the destination worker dies after the wire hop completed, the
+        prefill side still holds the pristine compressed streams of the last
+        ``send`` (kept under ``retain_last=True``); re-sending them to the
+        replacement worker costs one wire hop, not a re-encode.  Returns the
+        decoded cache, bit-identical to the original transfer's result;
+        ``last_stats`` / ``total_wire_bytes`` account the repeated hop like
+        any other call.  Tensor granularity only — chunked/mesh payloads are
+        not retained (their streams are re-segmented per transfer)."""
+        if self.plan.mesh is not None or self.plan.granularity == "chunked":
+            raise ValueError(
+                "resend_last requires the local tensor path (mesh=None, "
+                "n_chunks == 1); chunked/mesh transfers are not retained")
+        if self._retained is None:
+            raise RuntimeError(
+                "no retained transfer to re-send; build the session with "
+                "retain_last=True and complete a transfer first")
+        if self._staged is not None:
+            raise RuntimeError("resend_last() called with a send() pending")
+        self._set_verify(verify)
+        comp, raw, cache = self._retained
+        be = self.plan.backend
+        stats = TransferStats(chunk_wire_bytes=[], chunk_ok=[],
+                              raw_passthrough_bytes=0.0, n_elements=0)
+        for r in self.plan.routes:
+            key = r.key
+            if key in comp:
+                nbytes = float(_backend_for(comp[key], be)
+                               .wire_bytes(comp[key]))
+                if r.route == "fp8":
+                    stats.fp8_wire_bytes += nbytes
+                else:
+                    stats.leaf_wire_bytes[key] = nbytes
+                stats.leaf_ok[key] = True
+            elif key + "#hi" in comp:
+                hi = comp[key + "#hi"]
+                stats.leaf_wire_bytes[key] = float(
+                    _backend_for(hi, be).wire_bytes(hi))
+                stats.fp32_lo_wire_bytes += 2.0 * r.n_elements
+                stats.leaf_ok[key] = True
+            elif r.route == "raw":
+                stats.raw_passthrough_bytes += r.raw_bytes
+            else:
+                # a leaf that fell back to raw on the original encode
+                if r.route == "fp8":
+                    stats.fp8_wire_bytes += r.raw_bytes
+                else:
+                    stats.leaf_wire_bytes[key] = r.raw_bytes
+                stats.leaf_ok[key] = False
+        self.last_stats = stats
+        self._uid += 1
+        if self._channel is not None:
+            comp_f = {k: self._channel.ship(v, self._uid, ci, 0)
+                      for ci, (k, v) in enumerate(comp.items())}
+            raw_f = {k: self._channel.ship(v, self._uid, len(comp) + ci, 0)
+                     for ci, (k, v) in enumerate(raw.items())}
+            comp_d, raw_d = self._deliver_tensor(comp_f, raw_f, cache,
+                                                 comp, raw)
+        else:
+            comp_d, raw_d = comp, raw
+        out = decode_leaves(comp_d, raw_d, cache,
+                            backend=self.plan.tc.backend)
+        self._account()
+        return out
+
+    # -- prefix-delta transfer ----------------------------------------------
+    def enable_prefix_cache(self,
+                            capacity_bytes: Optional[float] = None
+                            ) -> PrefixIndex:
+        """Attach a :class:`PrefixIndex` so :meth:`transfer_delta` can skip
+        segments the destination already holds.  Chunked local path only —
+        delta granularity IS the plan's codec-aligned segmentation.  Returns
+        the index (idempotent; the first capacity wins)."""
+        if self.plan.mesh is not None or self.plan.granularity != "chunked":
+            raise ValueError(
+                "prefix-delta transfer rides the chunked local path "
+                "(mesh=None, n_chunks > 1); build the plan with "
+                "granularity='chunked'")
+        if self._prefix_index is None:
+            self._prefix_index = PrefixIndex(capacity_bytes)
+        return self._prefix_index
+
+    def transfer_delta(self, cache, session_id, *, check: bool = True,
+                       verify: Optional[bool] = None):
+        """Prefix-aware transfer: ship only the segments (and sidecars) that
+        CHANGED since this session id's last transfer.
+
+        The sender compares each segment of the folded stream bit-for-bit
+        against its retained shadow of the previous turn; an identical
+        segment costs zero wire bytes — the receiver re-uses the decoded
+        bits it already holds — and its raw size lands in
+        ``last_stats.prefix_hit_bytes`` (deliberately excluded from
+        ``wire_bytes``).  Changed segments run the normal chunked machinery:
+        capacity-schedule retries, checksum framing, verified re-fetches.
+        Sidecars (fp32 lo halves, fp8 leaves, raw passthrough) delta the
+        same way on whole-object bit equality.  The result is bit-identical
+        to a full ``transfer`` of the same cache; a cold session id degrades
+        to exactly a full transfer.  Requires :meth:`enable_prefix_cache`."""
+        if self._prefix_index is None:
+            raise RuntimeError(
+                "prefix cache not enabled; call enable_prefix_cache() first")
+        if self._staged is not None:
+            raise RuntimeError("transfer_delta() called with a send() "
+                               "pending")
+        self._set_verify(verify)
+        if check:
+            self._check_structure(cache)
+        self._uid += 1
+        plan = self.plan
+        stats = self._new_chunked_stats()
+        stream, lo, fp8, raw = plan.fold_stream(cache)
+        host_stream = np.asarray(stream)
+        entry = self._prefix_index.get(session_id)
+
+        # pipelined stream: per-segment sender-shadow comparison
+        bits: List[jax.Array] = []
+        for i, seg in enumerate(plan.segments):
+            if entry is not None and np.array_equal(
+                    host_stream[seg.start:seg.stop],
+                    entry.stream[seg.start:seg.stop]):
+                bits.append(entry.seg_bits[i])
+                stats.prefix_hit_bytes += seg.raw_bytes
+                # chunk_wire_bytes[i] stays 0.0: nothing crossed the wire
+            else:
+                p = self._wire_hop(stream, i, self._encode_chunk(stream, i),
+                                   stats)
+                bits.append(self._chunk_out(stream, i, p, stats))
+
+        # sidecars: whole-object bit equality against the shadow
+        lo_out: Dict[str, object] = {}
+        fp8_dec: Dict[str, object] = {}
+        raw_out: Dict[str, object] = {}
+        miss_lo: Dict[str, object] = {}
+        miss_fp8: Dict[str, object] = {}
+        miss_raw: Dict[str, object] = {}
+
+        def _side_hit(fam: str, key: str, sender_obj) -> bool:
+            if entry is None:
+                return False
+            shadow = entry.side_shadow.get(f"{fam}:{key}")
+            return (shadow is not None
+                    and np.array_equal(_host_bits(sender_obj), shadow))
+
+        for r in plan.routes:
+            k = r.key
+            if r.route == "fp32_hilo":
+                if _side_hit("lo", k, lo[k]):
+                    lo_out[k] = entry.side_obj[f"lo:{k}"]
+                    stats.prefix_hit_bytes += 2.0 * r.n_elements
+                else:
+                    miss_lo[k] = lo[k]
+                    stats.fp32_lo_wire_bytes += 2.0 * r.n_elements
+            elif r.route == "fp8":
+                if _side_hit("fp8", k, fp8[k]):
+                    fp8_dec[k] = entry.side_obj[f"fp8:{k}"]
+                    stats.prefix_hit_bytes += r.raw_bytes
+                else:
+                    ct, ok, extra = _encode_scheduled(
+                        plan, fp8[k], plan.fp8_codebook, r.n_elements, r.cap,
+                        scheduled=True)
+                    _record_unit(stats, k, bool(ok), extra)
+                    stats.fp8_wire_bytes += (
+                        float(plan.backend.wire_bytes(ct)) if ok
+                        else r.raw_bytes)
+                    miss_fp8[k] = ct if ok else fp8[k]
+            elif r.route == "raw":
+                if _side_hit("raw", k, raw[k]):
+                    raw_out[k] = entry.side_obj[f"raw:{k}"]
+                    stats.prefix_hit_bytes += r.raw_bytes
+                else:
+                    miss_raw[k] = raw[k]
+                    stats.raw_passthrough_bytes += r.raw_bytes
+
+        if self._channel is not None:
+            lo_f, fp8_f, raw_f = self._ship_sidecars(miss_lo, miss_fp8,
+                                                     miss_raw)
+            miss_lo, miss_fp8, miss_raw = self._deliver_sidecars(
+                lo_f, fp8_f, raw_f, (miss_lo, miss_fp8, miss_raw), stats)
+        lo_out.update(miss_lo)
+        raw_out.update(miss_raw)
+        for k, p in miss_fp8.items():
+            if isinstance(p, (jax.Array, np.ndarray)):  # raw fallback leaf
+                fp8_dec[k] = jnp.asarray(p)
+            else:
+                fp8_dec[k] = _backend_for(p, plan.backend).decode(p)
+
+        bits_out = (jnp.concatenate(bits) if len(bits) > 1 else bits[0])
+        out = plan.unfold_stream(bits_out, lo_out, fp8_dec, raw_out)
+
+        # refresh the shadow + receiver objects for the NEXT turn
+        shadow: Dict[str, np.ndarray] = {}
+        side_obj: Dict[str, object] = {}
+        nbytes = 2.0 * host_stream.size
+        for r in plan.routes:
+            k = r.key
+            if r.route == "fp32_hilo":
+                shadow[f"lo:{k}"] = _host_bits(lo[k]).copy()
+                side_obj[f"lo:{k}"] = lo_out[k]
+                nbytes += 2.0 * r.n_elements
+            elif r.route == "fp8":
+                shadow[f"fp8:{k}"] = _host_bits(fp8[k]).copy()
+                side_obj[f"fp8:{k}"] = fp8_dec[k]
+                nbytes += r.raw_bytes
+            elif r.route == "raw":
+                shadow[f"raw:{k}"] = _host_bits(raw[k]).copy()
+                side_obj[f"raw:{k}"] = raw_out[k]
+                nbytes += r.raw_bytes
+        self._prefix_index.put(session_id, _PrefixEntry(
+            stream=host_stream.copy(), seg_bits=list(bits),
+            side_shadow=shadow, side_obj=side_obj, nbytes=nbytes))
+
+        self.last_stats = stats
+        self._account()
+        return out
 
     def lower_hlo(self, cache) -> str:
         """Post-SPMD HLO of the mesh program on ``cache``: the
@@ -807,6 +1108,10 @@ class TransferSession:
                               raw_passthrough_bytes=0.0, n_elements=0)
         comp, raw = encode_leaves(self.plan, cache, scheduled=True,
                                   stats=stats)
+        if self.retain_last:
+            # pristine (pre-framing) payload: a decode-worker failover can
+            # re-ship the exact encoded streams without re-running the codec
+            self._retained = (comp, raw, cache)
         self.last_stats = stats
         if self._channel is None:
             return comp, raw, cache, None, None

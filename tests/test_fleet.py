@@ -1,0 +1,399 @@
+"""ISSUE 10: fleet-scale serving — the property-based invariant harness.
+
+The cluster scheduler (N prefill x M decode over heterogeneous links, routed
+placement, prefix-aware delta transfer) is pinned by properties that must
+hold on EVERY topology x policy x router x trace combination, not by
+hand-picked examples:
+
+* **termination / no starvation** — every submitted request reaches exactly
+  one terminal state; completed requests generated their full token budget.
+* **per-link conservation** — each link's busy counter equals the sum of its
+  transfers' occupancy intervals, and those intervals are pairwise disjoint
+  (a link is a serial resource; double-booking it would fabricate
+  bandwidth).
+* **wire decomposition** — ``transfer_bytes + prefix_hit_bytes`` equals the
+  full raw size of everything that crossed (or was elided from) the wire:
+  prefix hits are accounted, never dropped.
+* **submission-order determinism** — the event engine's output is a function
+  of the trace, not of ``submit()`` call order.
+* **1x1x1 degeneration** — a single-prefill / single-link / single-decode
+  cluster reproduces the legacy (pre-cluster) scheduler configuration
+  bit-identically for every link policy, per-request field by field.
+
+The harness sweeps ``>= 200`` seeded scenarios drawn from the full cross
+product; every scenario is reproducible from its printed parameters.
+"""
+
+import random
+
+import pytest
+
+from repro.core.pipeline import CodecProfile
+from repro.serving.cluster import (ClusterConfig, LinkSpec, PrefixDirectory,
+                                   resolve_cluster)
+from repro.serving.policy import available_policies
+from repro.serving.router import Router, available_routers, get_router
+from repro.serving.scheduler import (DisaggregatedScheduler, Request,
+                                     SchedulerConfig, summarize)
+from repro.serving.traces import (DEFAULT_TENANTS, TenantClass, TraceConfig,
+                                  generate_trace)
+
+KV_BYTES_TOK = 2 * 32 * 8 * 128 * 2
+PROF = CodecProfile(g_enc=613.3e9, g_dec=2181.8e9, ratio=1.324, link_bw=25e9)
+TERMINAL = ("completed", "shed", "failed-over")
+
+
+def _cfg(**kw):
+    base = dict(kv_bytes_per_token=KV_BYTES_TOK, profile=PROF, compress=True,
+                prefill_time_per_token=1e-7, decode_time_per_step=1e-4,
+                max_prefill_batch=4, max_decode_slots=64)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def _run(cfg, reqs):
+    s = DisaggregatedScheduler(cfg)
+    for r in reqs:
+        s.submit(r)
+    return s, s.run()
+
+
+def _trace(seed, n=10, session_p=0.0):
+    return generate_trace(TraceConfig(
+        seed=seed, n_requests=n, session_p=session_p, prompt_min=16,
+        prompt_max=512, mean_burst_gap_s=2e-4, burst_spread_s=2e-5,
+        followup_tokens=(8, 64),
+        tenants=(TenantClass("interactive", 0.5, 0.05, (1, 4)),
+                 TenantClass("batch", 0.5, 1.0, (2, 8)))))
+
+
+def _fields(r):
+    return (r.rid, r.state, r.worker, r.prefill_done, r.link_start,
+            r.transfer_done, r.admit_time, r.first_token_time, r.finish_time,
+            r.tokens_out, r.failovers, r.retries, tuple(r.link_history),
+            tuple(r.link_ids))
+
+
+# ---------------------------------------------------------------------------
+# the invariants
+# ---------------------------------------------------------------------------
+
+def _check_terminal(done, n, ctx):
+    assert len(done) == n, f"{ctx}: {n - len(done)} requests not terminal"
+    for r in done:
+        assert r.state in TERMINAL, f"{ctx}: rid {r.rid} state {r.state!r}"
+        if r.state == "completed":
+            assert r.tokens_out == r.max_new_tokens, \
+                f"{ctx}: rid {r.rid} produced {r.tokens_out}" \
+                f"/{r.max_new_tokens} tokens"
+            # (admit_time may precede transfer_done under 'spec' links)
+            assert r.finish_time >= r.transfer_done >= r.link_start \
+                >= r.prefill_done >= r.arrival, \
+                f"{ctx}: rid {r.rid} lifecycle out of order"
+            assert r.admit_time >= r.prefill_done, \
+                f"{ctx}: rid {r.rid} admitted before prefill"
+
+
+def _check_links(sched, done, ctx):
+    per = [[] for _ in range(len(sched.link_busy_by_link))]
+    for r in done:
+        assert len(r.link_ids) == len(r.link_history), \
+            f"{ctx}: rid {r.rid} link_ids/link_history length mismatch"
+        for li, iv in zip(r.link_ids, r.link_history):
+            per[li].append(iv)
+    for li, ivals in enumerate(per):
+        ivals.sort()
+        drift = abs(sched.link_busy_by_link[li]
+                    - sum(b - a for a, b in ivals))
+        assert drift < 1e-9, f"{ctx}: link {li} drifted by {drift}"
+        for (_, b), (a, _) in zip(ivals, ivals[1:]):
+            assert b <= a + 1e-12, f"{ctx}: link {li} intervals overlap"
+    total = abs(sched.link_busy_s - sum(sched.link_busy_by_link))
+    assert total < 1e-9, f"{ctx}: per-link busy does not sum to the total"
+
+
+def _check_wire_decomposition(sched, done, ctx):
+    expected = sum(r.prompt_len * KV_BYTES_TOK * len(r.link_history)
+                   for r in done)
+    got = sched.transfer_bytes + sched.prefix_hit_bytes
+    assert abs(got - expected) <= 1e-6 * max(expected, 1.0), \
+        f"{ctx}: shipped + hit = {got}, expected {expected}"
+
+
+# ---------------------------------------------------------------------------
+# the >= 200-scenario sweep
+# ---------------------------------------------------------------------------
+
+def _topologies():
+    pols = available_policies()
+    mk = lambda i, bw: LinkSpec(policy=pols[i % len(pols)], bw_scale=bw)
+    return [
+        ClusterConfig(n_prefill=1, n_decode=1, links=(mk(0, 1.0),)),
+        ClusterConfig(n_prefill=2, n_decode=3,
+                      links=(mk(0, 1.0), mk(1, 0.5))),
+        ClusterConfig(n_prefill=1, n_decode=2,
+                      links=(mk(1, 1.0), mk(2, 0.25), mk(3, 2.0))),
+        ClusterConfig(n_prefill=3, n_decode=1, links=(mk(4, 0.5),)),
+        ClusterConfig(n_prefill=2, n_decode=2,
+                      links=(mk(2, 1.0), mk(2, 1.0)),
+                      prefix_cache_bytes=float(KV_BYTES_TOK) * 4096),
+    ]
+
+
+def _scenarios():
+    """The seeded cross product: topology x router x trace seed x warmth.
+    5 topologies x 4+ routers x 5 seeds x 2 session modes >= 200."""
+    out = []
+    for ti, topo in enumerate(_topologies()):
+        for router in available_routers():
+            for seed in range(5):
+                for session_p in (0.0, 0.5):
+                    out.append((ti, router, seed, session_p))
+    return out
+
+
+def test_scenario_count_is_at_least_200():
+    assert len(_scenarios()) >= 200
+
+
+def test_invariants_over_all_scenarios():
+    topos = _topologies()
+    for ti, router, seed, session_p in _scenarios():
+        topo = topos[ti]
+        cluster = ClusterConfig(
+            n_prefill=topo.n_prefill, n_decode=topo.n_decode,
+            links=topo.links, router=router,
+            prefix_cache_bytes=topo.prefix_cache_bytes)
+        ctx = f"topo={ti} router={router} seed={seed} warm={session_p}"
+        reqs = _trace(seed, session_p=session_p)
+        sched, done = _run(_cfg(cluster=cluster), reqs)
+        _check_terminal(done, len(reqs), ctx)
+        _check_links(sched, done, ctx)
+        _check_wire_decomposition(sched, done, ctx)
+        if session_p == 0.0 or topo.prefix_cache_bytes is None:
+            assert sched.prefix_hit_bytes == 0.0, \
+                f"{ctx}: prefix hits without a warm trace and a cache"
+
+
+def test_submission_order_determinism():
+    """The event engine's output is a function of the trace alone: shuffling
+    submit() order changes nothing, field for field."""
+    topo = _topologies()[1]
+    for seed in range(3):
+        reqs = _trace(seed, session_p=0.5)
+        cluster = ClusterConfig(n_prefill=topo.n_prefill,
+                                n_decode=topo.n_decode, links=topo.links,
+                                router="transfer-aware",
+                                prefix_cache_bytes=float(KV_BYTES_TOK) * 8192)
+        _, a = _run(_cfg(cluster=cluster), reqs)
+        shuffled = _trace(seed, session_p=0.5)
+        random.Random(seed).shuffle(shuffled)
+        _, b = _run(_cfg(cluster=cluster), shuffled)
+        fa = sorted(map(_fields, a))
+        fb = sorted(map(_fields, b))
+        assert fa == fb, f"seed {seed}: submission order changed the run"
+
+
+# ---------------------------------------------------------------------------
+# 1x1x1 degeneration: the cluster model nests the legacy scheduler exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", available_policies())
+def test_1x1x1_degenerates_to_legacy_bit_identical(policy):
+    reqs = lambda: [Request(rid=i, arrival=i * 1e-4,
+                            prompt_len=(1024, 128, 4096, 512)[i % 4],
+                            max_new_tokens=4,
+                            deadline=i * 1e-4 + (0.5 if i % 3 else 0.05))
+                    for i in range(12)]
+    _, legacy = _run(_cfg(policy=policy), reqs())
+    cluster = ClusterConfig(n_prefill=1, n_decode=1,
+                            links=(LinkSpec(policy=policy),),
+                            router="transfer-aware")
+    _, fleet = _run(_cfg(cluster=cluster), reqs())
+    assert sorted(map(_fields, legacy)) == sorted(map(_fields, fleet))
+    assert summarize(legacy) == summarize(fleet)
+
+
+@pytest.mark.parametrize("n_workers", [2, 3])
+def test_legacy_router_reproduces_multiworker_legacy(n_workers):
+    """router='legacy' + N decode workers on one link is EXACTLY the PR-6
+    multi-worker scheduler: placement at admission, not at routing."""
+    reqs = lambda: [Request(rid=i, arrival=i * 1e-4,
+                            prompt_len=(2048, 256)[i % 2], max_new_tokens=4)
+                    for i in range(10)]
+    _, legacy = _run(_cfg(policy="sjf", n_decode_workers=n_workers,
+                          max_decode_slots=2 * n_workers), reqs())
+    cluster = ClusterConfig(n_prefill=1, n_decode=n_workers,
+                            links=(LinkSpec(policy="sjf"),), router="legacy")
+    _, fleet = _run(_cfg(cluster=cluster,
+                         max_decode_slots=2 * n_workers), reqs())
+    assert sorted(map(_fields, legacy)) == sorted(map(_fields, fleet))
+
+
+def test_legacy_config_resolves_to_legacy_cluster():
+    cfg = _cfg(policy="edf", n_decode_workers=3)
+    c = resolve_cluster(cfg)
+    assert (c.n_prefill, c.n_decode, c.n_links) == (1, 3, 1)
+    assert c.router == "legacy" and c.links[0].policy == "edf"
+    explicit = ClusterConfig(n_prefill=2, n_decode=2)
+    assert resolve_cluster(_cfg(cluster=explicit)) is explicit
+
+
+# ---------------------------------------------------------------------------
+# routing behaviour
+# ---------------------------------------------------------------------------
+
+def test_transfer_aware_router_prefers_fast_idle_link():
+    """With one full-rate and one crippled link, the transfer-aware router
+    must put a lone request on the fast link."""
+    cluster = ClusterConfig(n_prefill=1, n_decode=1,
+                            links=(LinkSpec(bw_scale=0.01), LinkSpec()),
+                            router="transfer-aware")
+    sched, done = _run(_cfg(cluster=cluster),
+                       [Request(rid=0, arrival=0.0, prompt_len=4096,
+                                max_new_tokens=1)])
+    assert done[0].link_ids == [1]
+    assert sched.link_busy_by_link[0] == 0.0
+
+
+def test_transfer_aware_router_balances_decode_load():
+    """Simultaneous identical requests spread over decode workers instead of
+    piling onto worker 0 (queue-depth term of the placement cost)."""
+    cluster = ClusterConfig(n_prefill=1, n_decode=3, links=(LinkSpec(),),
+                            router="transfer-aware")
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=1024, max_new_tokens=8)
+            for i in range(6)]
+    _, done = _run(_cfg(cluster=cluster, decode_time_per_step=5e-2), reqs)
+    assert len({r.worker for r in done}) > 1
+
+
+def test_round_robin_router_cycles():
+    cluster = ClusterConfig(n_prefill=1, n_decode=2,
+                            links=(LinkSpec(), LinkSpec()),
+                            router="round-robin")
+    reqs = [Request(rid=i, arrival=i * 1e-5, prompt_len=256,
+                    max_new_tokens=1) for i in range(8)]
+    sched, done = _run(_cfg(cluster=cluster), reqs)
+    assert {r.worker for r in done} == {0, 1}
+    assert all(b > 0 for b in sched.link_busy_by_link)
+
+
+def test_router_registry():
+    assert set(available_routers()) >= {"legacy", "transfer-aware",
+                                        "round-robin", "least-loaded"}
+    assert isinstance(get_router("transfer-aware"), Router)
+    with pytest.raises(KeyError):
+        get_router("no-such-router")
+
+
+# ---------------------------------------------------------------------------
+# sim-side prefix directory
+# ---------------------------------------------------------------------------
+
+def _warm_cluster(cache_bytes):
+    return ClusterConfig(n_prefill=1, n_decode=2, links=(LinkSpec(),),
+                         router="transfer-aware",
+                         prefix_cache_bytes=cache_bytes)
+
+
+def test_warm_trace_hits_prefix_cache_cold_does_not():
+    warm = _trace(3, n=24, session_p=0.8)
+    cold = _trace(3, n=24, session_p=0.0)
+    s_warm, _ = _run(_cfg(cluster=_warm_cluster(1 << 40)), warm)
+    s_cold, _ = _run(_cfg(cluster=_warm_cluster(1 << 40)), cold)
+    assert s_warm.prefix_hit_bytes > 0
+    assert s_cold.prefix_hit_bytes == 0.0
+    assert s_warm.transfer_bytes + s_warm.prefix_hit_bytes == pytest.approx(
+        sum(r.prompt_len * KV_BYTES_TOK for r in warm))
+
+
+def test_prefix_hits_reduce_shipped_bytes_on_same_trace():
+    warm = lambda: _trace(5, n=24, session_p=0.8)
+    s_on, _ = _run(_cfg(cluster=_warm_cluster(1 << 40)), warm())
+    s_off, _ = _run(_cfg(cluster=_warm_cluster(None)), warm())
+    assert s_on.transfer_bytes < s_off.transfer_bytes
+    assert s_on.transfer_bytes + s_on.prefix_hit_bytes == pytest.approx(
+        s_off.transfer_bytes)
+
+
+def test_prefix_directory_lru_eviction_under_pressure():
+    d = PrefixDirectory(n_workers=1, capacity_bytes=100.0)
+    d.insert(0, session=1, tokens=30, bytes_per_token=1.0)
+    d.insert(0, session=2, tokens=30, bytes_per_token=1.0)
+    d.insert(0, session=3, tokens=30, bytes_per_token=1.0)
+    assert d.resident_bytes(0) == 90.0
+    d.hit_tokens(0, 1)                      # pure lookup: no LRU touch
+    d.insert(0, session=1, tokens=35, bytes_per_token=1.0)  # refresh 1
+    d.insert(0, session=4, tokens=30, bytes_per_token=1.0)  # evicts 2
+    assert d.hit_tokens(0, 2) == 0
+    assert d.hit_tokens(0, 1) == 35
+    assert d.evictions >= 1
+    # a single entry larger than the whole budget never sticks
+    d.insert(0, session=9, tokens=500, bytes_per_token=1.0)
+    assert d.hit_tokens(0, 9) == 0
+
+
+def test_prefix_directory_is_per_worker():
+    d = PrefixDirectory(n_workers=2)
+    d.insert(0, session=7, tokens=100, bytes_per_token=2.0)
+    assert d.hit_tokens(0, 7) == 100
+    assert d.hit_tokens(1, 7) == 0
+    d.drop_worker(0)
+    assert d.hit_tokens(0, 7) == 0
+
+
+def test_sim_prefix_eviction_under_hbm_pressure():
+    """A directory sized to ~2 sessions on a many-session trace must evict;
+    the run still terminates and conserves, hits just get rarer."""
+    warm = lambda: _trace(7, n=32, session_p=0.8)
+    tiny = float(KV_BYTES_TOK) * 600        # a couple of small sessions
+    s_tiny, done = _run(_cfg(cluster=_warm_cluster(tiny)), warm())
+    s_big, _ = _run(_cfg(cluster=_warm_cluster(1 << 40)), warm())
+    _check_terminal(done, 32, "tiny-cache")
+    assert s_tiny.prefix_dir.evictions > 0
+    assert s_tiny.prefix_hit_bytes <= s_big.prefix_hit_bytes
+
+
+# ---------------------------------------------------------------------------
+# trace generator properties
+# ---------------------------------------------------------------------------
+
+def test_trace_is_seed_deterministic_and_sorted():
+    a = _trace(9, n=40, session_p=0.5)
+    b = _trace(9, n=40, session_p=0.5)
+    assert [(r.arrival, r.prompt_len, r.session, r.prefix_len, r.tenant,
+             r.deadline, r.max_new_tokens) for r in a] == \
+           [(r.arrival, r.prompt_len, r.session, r.prefix_len, r.tenant,
+             r.deadline, r.max_new_tokens) for r in b]
+    assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
+    assert [r.rid for r in a] == list(range(40))
+
+
+def test_trace_sessions_share_prefixes():
+    reqs = _trace(11, n=60, session_p=0.7)
+    cont = [r for r in reqs if r.prefix_len > 0]
+    assert cont, "no session continuations in a warm trace"
+    for r in cont:
+        assert r.session >= 0 and r.prompt_len > r.prefix_len
+
+
+def test_trace_draws_all_tenants():
+    reqs = generate_trace(TraceConfig(seed=2, n_requests=64))
+    names = {r.tenant for r in reqs}
+    assert names == {t.name for t in DEFAULT_TENANTS}
+    for r in reqs:
+        t = next(t for t in DEFAULT_TENANTS if t.name == r.tenant)
+        assert r.deadline == pytest.approx(r.arrival + t.slo_s)
+        assert t.new_tokens[0] <= r.max_new_tokens <= t.new_tokens[1]
+
+
+def test_cluster_config_validation():
+    with pytest.raises(ValueError):
+        ClusterConfig(n_prefill=0, n_decode=1)
+    with pytest.raises(ValueError):
+        ClusterConfig(n_prefill=1, n_decode=1, links=())
+    with pytest.raises(ValueError):
+        LinkSpec(bw_scale=0.0)
+    with pytest.raises(KeyError):
+        # unknown router keys surface at scheduler construction
+        DisaggregatedScheduler(_cfg(cluster=ClusterConfig(router="nope")))

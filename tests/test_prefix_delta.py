@@ -1,0 +1,342 @@
+"""ISSUE 10: prefix-aware delta transfer + failover re-send, execution side.
+
+``TransferSession.transfer_delta`` ships only the segments/sidecars whose
+sender-side bits changed since the session's previous turn; everything else
+is re-used from the receiver's resident copy and accounted in
+``prefix_hit_bytes``.  The properties pinned here:
+
+* **bit identity** — a delta transfer's result equals a full transfer of the
+  same cache, bitwise, on every route (splitzip stream, fp32 hi/lo, fp8
+  sidecar, raw passthrough), cold or warm, with or without fault injection.
+* **cold = full** — an unknown session id hits nothing and ships everything.
+* **delta saves wire** — an unchanged prefix crosses the wire zero times;
+  shipped + hit bytes decompose to exactly the full-transfer wire bytes of
+  a cold send.
+* **eviction** — ``PrefixIndex`` is LRU-by-bytes; an evicted session's next
+  transfer is cold (correct, just unaided).
+* **failover re-send** — ``resend_last``/``DisaggregatedEngine.resend_cache``
+  rebuild a dead decode worker's state bit-identically from the retained
+  payload, wired end-to-end through the scheduler's ``on_failover`` hook.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codebook as cbm
+from repro.core.pipeline import CodecProfile
+from repro.serving.cluster import ClusterConfig, LinkSpec
+from repro.serving.faults import FaultPlan, WorkerKill
+from repro.serving.plan import TransferConfig, TransferPlan
+from repro.serving.session import PrefixIndex, TransferSession
+from repro.serving.scheduler import (DisaggregatedScheduler, Request,
+                                     SchedulerConfig)
+
+
+def _bf16(shape, seed):
+    r = np.random.default_rng(seed)
+    x = r.standard_normal(shape) * np.exp(r.standard_normal(shape))
+    return jnp.asarray(x.astype(np.float32)).astype(jnp.bfloat16)
+
+
+@pytest.fixture(scope="module")
+def routed_cache():
+    """A cache exercising every route: bf16 k/v (splitzip stream), a big
+    fp32 leaf (hi/lo), a float8 leaf (fp8 sidecar), int ids (raw)."""
+    r = np.random.default_rng(3)
+    cache = {
+        "k": _bf16((2, 64, 64), 1),
+        "v": _bf16((2, 64, 64), 2),
+        "f32": jnp.asarray(r.standard_normal((32, 64)), jnp.float32),
+        "f8": jnp.asarray(r.standard_normal((32, 32)),
+                          jnp.float32).astype(jnp.float8_e4m3fn),
+        "ids": jnp.arange(64, dtype=jnp.int32),
+    }
+    bits = np.asarray(jax.lax.bitcast_convert_type(cache["k"],
+                                                   jnp.uint16)).ravel()
+    return cache, cbm.calibrate([bits], k=16)
+
+
+def _plan(cache, cb, n_chunks=4, **kw):
+    return TransferPlan.build(cache, TransferConfig(
+        codebook=cb, n_chunks=n_chunks, compress_fp32=True, **kw))
+
+
+def _eq(a, b):
+    for k in a:
+        assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), k
+
+
+def _mutate_tail(cache, seed=5):
+    """A next-turn cache: identical prefix, perturbed suffix on every route."""
+    r = np.random.default_rng(seed)
+    out = dict(cache)
+    k = np.asarray(cache["k"]).copy()
+    k[-1, -8:, :] = r.standard_normal(k[-1, -8:, :].shape).astype(k.dtype)
+    out["k"] = jnp.asarray(k)
+    f32 = np.asarray(cache["f32"]).copy()
+    f32[-1, :] += 1.0
+    out["f32"] = jnp.asarray(f32)
+    f8 = np.asarray(cache["f8"]).copy()
+    f8[-1, :] = np.float64(1.5)
+    out["f8"] = jnp.asarray(f8).astype(jnp.float8_e4m3fn)
+    out["ids"] = cache["ids"] + 1
+    return out
+
+
+class TestTransferDelta:
+    def test_plan_covers_every_route(self, routed_cache):
+        cache, cb = routed_cache
+        routes = {r.route for r in _plan(cache, cb).routes}
+        assert routes == {"splitzip", "fp32_hilo", "fp8", "raw"}
+
+    def test_cold_delta_equals_full_transfer(self, routed_cache):
+        cache, cb = routed_cache
+        plan = _plan(cache, cb)
+        full = plan.session().transfer(cache)
+        sess = plan.session()
+        sess.enable_prefix_cache()
+        out = sess.transfer_delta(cache, session_id=0)
+        _eq(out, full)
+        _eq(out, cache)
+        st = sess.last_stats
+        assert st.prefix_hit_bytes == 0.0
+        ref = plan.session()
+        ref.transfer(cache)
+        assert st.wire_bytes == pytest.approx(ref.last_stats.wire_bytes)
+
+    def test_unchanged_cache_ships_zero_bytes(self, routed_cache):
+        cache, cb = routed_cache
+        sess = _plan(cache, cb).session()
+        sess.enable_prefix_cache()
+        sess.transfer_delta(cache, session_id=0)
+        out = sess.transfer_delta(cache, session_id=0)
+        _eq(out, cache)
+        st = sess.last_stats
+        assert st.wire_bytes == 0.0
+        assert st.prefix_hit_bytes > 0
+
+    def test_warm_delta_bit_identical_and_cheaper(self, routed_cache):
+        cache, cb = routed_cache
+        plan = _plan(cache, cb)
+        sess = plan.session()
+        sess.enable_prefix_cache()
+        sess.transfer_delta(cache, session_id=0)
+        cold_wire = sess.last_stats.wire_bytes
+
+        turn2 = _mutate_tail(cache)
+        out = sess.transfer_delta(turn2, session_id=0)
+        _eq(out, turn2)
+        full = plan.session().transfer(turn2)
+        _eq(out, full)
+        st = sess.last_stats
+        assert 0 < st.wire_bytes < cold_wire
+        assert st.prefix_hit_bytes > 0
+        # every route's changed piece actually shipped
+        assert any(w > 0 for w in st.chunk_wire_bytes)
+        assert st.fp32_lo_wire_bytes > 0
+        assert st.fp8_wire_bytes > 0
+        assert st.raw_passthrough_bytes > 0
+
+    def test_sessions_are_isolated(self, routed_cache):
+        """Another session id never hits this session's resident prefix."""
+        cache, cb = routed_cache
+        sess = _plan(cache, cb).session()
+        sess.enable_prefix_cache()
+        sess.transfer_delta(cache, session_id=0)
+        out = sess.transfer_delta(cache, session_id=1)
+        _eq(out, cache)
+        assert sess.last_stats.prefix_hit_bytes == 0.0
+
+    def test_delta_under_fault_injection_stays_bit_identical(self,
+                                                             routed_cache):
+        cache, cb = routed_cache
+        sess = _plan(cache, cb).session(
+            verify=True, faults=FaultPlan(seed=9, corrupt_p=0.3, drop_p=0.1))
+        sess.enable_prefix_cache()
+        a = sess.transfer_delta(cache, session_id=0)
+        turn2 = _mutate_tail(cache)
+        b = sess.transfer_delta(turn2, session_id=0)
+        _eq(a, cache)
+        _eq(b, turn2)
+        assert sess._channel.injected >= 1
+
+    def test_fp32_and_fp8_hits_are_bitwise_not_numeric(self, routed_cache):
+        """NaN payloads and negative zeros still delta correctly: the shadow
+        comparison runs on bytes, so nan != nan never forces a miss and
+        -0.0 == 0.0 never fakes a hit."""
+        cache, cb = routed_cache
+        f32 = np.asarray(cache["f32"]).copy()
+        f32[0, 0] = np.nan
+        f32[0, 1] = -0.0
+        c1 = dict(cache, f32=jnp.asarray(f32))
+        sess = _plan(c1, cb).session()
+        sess.enable_prefix_cache()
+        sess.transfer_delta(c1, session_id=0)
+        sess.transfer_delta(c1, session_id=0)       # NaN must still hit
+        assert sess.last_stats.fp32_lo_wire_bytes == 0.0
+        f32b = f32.copy()
+        f32b[0, 1] = 0.0        # -0.0 -> +0.0: sign lives in the HI half,
+        c2 = dict(c1, f32=jnp.asarray(f32b))        # so a STREAM miss
+        out = sess.transfer_delta(c2, session_id=0)
+        assert any(w > 0 for w in sess.last_stats.chunk_wire_bytes)
+        assert np.signbit(np.asarray(out["f32"]))[0, 1] == False  # noqa: E712
+        # a low-mantissa bit flip touches ONLY the raw lo sidecar
+        u = f32b.view(np.uint32).copy()
+        u[1, 0] ^= np.uint32(1)
+        c3 = dict(c1, f32=jnp.asarray(u.view(np.float32)))
+        out = sess.transfer_delta(c3, session_id=0)
+        assert sess.last_stats.fp32_lo_wire_bytes > 0.0
+        assert np.array_equal(np.asarray(out["f32"]).view(np.uint32),
+                              u, equal_nan=False)
+
+    def test_delta_requires_chunked_path_and_enablement(self, routed_cache):
+        cache, cb = routed_cache
+        with pytest.raises(ValueError, match="chunked"):
+            _plan(cache, cb, n_chunks=1).session().enable_prefix_cache()
+        sess = _plan(cache, cb).session()
+        with pytest.raises(RuntimeError, match="enable_prefix_cache"):
+            sess.transfer_delta(cache, session_id=0)
+
+
+class TestPrefixIndexEviction:
+    def test_lru_eviction_under_pressure(self, routed_cache):
+        cache, cb = routed_cache
+        sess = _plan(cache, cb).session()
+        entry_sz = 0
+        probe = _plan(cache, cb).session()
+        idx0 = probe.enable_prefix_cache()
+        probe.transfer_delta(cache, session_id=0)
+        entry_sz = idx0.resident_bytes
+        assert entry_sz > 0
+
+        idx = sess.enable_prefix_cache(capacity_bytes=2.5 * entry_sz)
+        for sid in range(4):
+            sess.transfer_delta(cache, session_id=sid)
+        assert len(idx) == 2
+        assert idx.evictions == 2
+        assert idx.sessions() == [2, 3]     # LRU order: oldest evicted
+        # the evicted session is cold again — correct, just unaided
+        sess.transfer_delta(cache, session_id=0)
+        assert sess.last_stats.prefix_hit_bytes == 0.0
+        # ...and the still-resident one hits
+        sess.transfer_delta(cache, session_id=3)
+        assert sess.last_stats.prefix_hit_bytes > 0
+
+    def test_single_entry_over_budget_never_sticks(self, routed_cache):
+        cache, cb = routed_cache
+        sess = _plan(cache, cb).session()
+        idx = sess.enable_prefix_cache(capacity_bytes=16.0)
+        sess.transfer_delta(cache, session_id=0)
+        assert len(idx) == 0 and idx.evictions == 1
+        assert idx.resident_bytes == 0.0
+
+    def test_capacity_validation(self):
+        with pytest.raises(ValueError):
+            PrefixIndex(capacity_bytes=0.0)
+        with pytest.raises(ValueError):
+            PrefixIndex(capacity_bytes=-1.0)
+
+
+class TestResendLast:
+    def test_resend_bit_identical_and_same_wire(self, routed_cache):
+        cache, cb = routed_cache
+        sess = _plan(cache, cb, n_chunks=1).session(retain_last=True)
+        out1 = sess.transfer(cache)
+        w1 = sess.last_stats.wire_bytes
+        out2 = sess.resend_last()
+        _eq(out1, cache)
+        _eq(out2, cache)
+        assert sess.last_stats.wire_bytes == pytest.approx(w1)
+        assert sess.calls == 2
+        assert sess.total_wire_bytes == pytest.approx(2 * w1)
+
+    def test_resend_under_faults_recovers(self, routed_cache):
+        cache, cb = routed_cache
+        sess = _plan(cache, cb, n_chunks=1).session(
+            retain_last=True, verify=True,
+            faults=FaultPlan(seed=3, corrupt_p=0.2))
+        sess.transfer(cache)
+        out = sess.resend_last()
+        _eq(out, cache)
+
+    def test_resend_guard_rails(self, routed_cache):
+        cache, cb = routed_cache
+        with pytest.raises(RuntimeError, match="retain_last"):
+            _plan(cache, cb, n_chunks=1).session().resend_last()
+        with pytest.raises(ValueError, match="tensor"):
+            _plan(cache, cb, n_chunks=4).session(
+                retain_last=True).resend_last()
+
+
+class TestEngineFailoverResend:
+    def _setup(self):
+        from repro.configs.base import get_config
+        from repro.models import model as M
+        cfg = get_config("smollm-135m").reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jnp.asarray(np.random.default_rng(0).integers(
+            0, cfg.vocab_size, (2, 16)), jnp.int32)
+        _, st = M.prefill(params, {"tokens": toks}, cfg, max_seq=24)
+        leaves = [l for l in jax.tree_util.tree_leaves(st.cache)
+                  if l.dtype == jnp.bfloat16]
+        bits = np.concatenate([
+            np.asarray(jax.lax.bitcast_convert_type(l, jnp.uint16)).ravel()
+            for l in leaves])
+        return cfg, params, st, cbm.calibrate([bits], k=16)
+
+    def test_engine_resend_is_bitwise_identical(self):
+        from repro.serving.engine import DisaggregatedEngine
+        cfg, params, st, cb = self._setup()
+        eng = DisaggregatedEngine(cfg, params, cb, retain_for_failover=True)
+        first = eng.transfer(st)
+        again = eng.resend_cache(st)
+        fa = jax.tree_util.tree_leaves(first.cache)
+        fb = jax.tree_util.tree_leaves(again.cache)
+        assert all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(fa, fb))
+        assert eng.stats.failover_resends == 1
+
+    def test_scheduler_failover_triggers_engine_resend(self):
+        """The PR-9 gap, closed end to end: a decode-worker kill makes the
+        scheduler fire ``on_failover``, which drives a REAL engine-side
+        re-send of the cached compressed stream — and the re-sent state is
+        bitwise what the dead worker held."""
+        from repro.serving.engine import DisaggregatedEngine
+        cfg, params, st, cb = self._setup()
+        eng = DisaggregatedEngine(cfg, params, cb, retain_for_failover=True)
+        baseline = eng.transfer(st)          # what the dead worker held
+
+        resent = []
+
+        def on_failover(req):
+            resent.append((req.rid, eng.resend_cache(st)))
+
+        prof = CodecProfile(g_enc=613.3e9, g_dec=2181.8e9, ratio=1.324,
+                            link_bw=25e9)
+        sched = DisaggregatedScheduler(SchedulerConfig(
+            kv_bytes_per_token=2048, profile=prof, compress=True,
+            prefill_time_per_token=0.0, decode_time_per_step=1e-3,
+            max_prefill_batch=4,
+            cluster=ClusterConfig(n_prefill=1, n_decode=2,
+                                  links=(LinkSpec(),),
+                                  router="transfer-aware"),
+            faults=FaultPlan(seed=1, worker_kills=(
+                WorkerKill(worker=0, at=5e-3),)),
+            heartbeat_timeout_s=1e-3,
+            on_failover=on_failover))
+        for i in range(4):
+            sched.submit(Request(rid=i, arrival=0.0, prompt_len=1024,
+                                 max_new_tokens=64))
+        done = sched.run()
+        assert sched.failovers > 0
+        assert resent, "scheduler failover never reached the engine hook"
+        assert eng.stats.failover_resends == len(resent)
+        for _, state in resent:
+            fa = jax.tree_util.tree_leaves(baseline.cache)
+            fb = jax.tree_util.tree_leaves(state.cache)
+            assert all(np.array_equal(np.asarray(a), np.asarray(b))
+                       for a, b in zip(fa, fb))
+        assert all(r.state in ("completed", "shed", "failed-over")
+                   for r in done)
